@@ -1,0 +1,83 @@
+"""Shared benchmark plumbing: builds the paper's §5 setup once per dataset
+and runs each algorithm under an equal simulated-communication-time budget."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs.paper_models import CIFAR_CNN, MNIST_CNN
+from repro.core import PersAFLConfig
+from repro.data import make_federated_dataset
+from repro.fl import AsyncSimulator, DelayModel, SyncSimulator, \
+    make_personalized_eval
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+
+FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+
+# the 8 algorithms of paper Figure 2 (4 sync, 1 async baseline, +FedAsync
+# and the two PersA-FL variants = this work)
+ALGOS = ["fedavg", "fedprox", "scaffold", "perfedavg", "pfedme",
+         "fedasync", "persafl-maml", "persafl-me"]
+
+
+def setup(kind: str, n_clients: int = 30, seed: int = 0):
+    cpc = 5 if kind == "mnist" else 3   # paper §5: c=5 MNIST, c=3 CIFAR
+    ccfg = MNIST_CNN if kind == "mnist" else CIFAR_CNN
+    clients = make_federated_dataset(kind, n_clients=n_clients,
+                                     classes_per_client=cpc, seed=seed)
+    params = init_cnn(ccfg, jax.random.PRNGKey(seed))
+    loss = lambda p, b: cnn_loss(ccfg, p, b, train=False)
+    acc = lambda p, b: cnn_accuracy(ccfg, p, b)
+    ev = make_personalized_eval(loss, acc, clients, ft_steps=1, ft_lr=0.01)
+    return clients, params, loss, acc, ev
+
+
+def run_algo(algo: str, clients, params, loss, ev, *, seed: int = 0,
+             async_rounds: int = 150, sync_rounds: int = 20,
+             batch: int = 16) -> Dict:
+    """Returns {algo, times, acc, rounds, wall_s, mean_active_ratio}."""
+    # hyper-params per paper Appendix D protocol: Q=10, beta=1, lambda from
+    # {20,25,30}, alpha from {0.002,0.005,0.01}; stepsize selected per
+    # method (paper reports the best configuration per algorithm).  Async
+    # single-delta applies need the theory-scaled eta ~ 1/(Q sqrt(L_c T))
+    # ~= 2e-3 for stability; sync rounds average 10 clients and tolerate
+    # the larger 1e-2.
+    q = 5 if FAST else 10
+    common = dict(q_local=q, beta=1.0, alpha=0.01, lam=25.0,
+                  inner_steps=5 if FAST else 10, inner_eta=0.02,
+                  maml_mode="full")
+    delays = DelayModel(len(clients), seed=seed)
+    t0 = time.time()
+    if algo in ("fedasync", "persafl-maml", "persafl-me"):
+        option = {"fedasync": "A", "persafl-maml": "B", "persafl-me": "C"}[algo]
+        pcfg = PersAFLConfig(option=option, eta=0.002, **common)
+        rounds = async_rounds if option == "A" else max(async_rounds // 2, 40)
+        sim = AsyncSimulator(clients=clients, loss_fn=loss,
+                             init_params=params, pcfg=pcfg, delays=delays,
+                             batch_size=batch, seed=seed)
+        hist = sim.run(max_server_rounds=rounds,
+                       eval_every=max(rounds // 10, 5), eval_fn=ev)
+    else:
+        pcfg = PersAFLConfig(option="A", eta=0.01, **common)
+        sim = SyncSimulator(clients=clients, loss_fn=loss, init_params=params,
+                            pcfg=pcfg, delays=delays, algo=algo,
+                            clients_per_round=10, batch_size=batch, seed=seed)
+        hist = sim.run(max_rounds=sync_rounds, eval_every=1, eval_fn=ev)
+    return {"algo": algo, "times": hist.times, "acc": hist.acc,
+            "wall_s": time.time() - t0,
+            "mean_active_ratio": float(np.mean(hist.active_ratio))
+            if hist.active_ratio else 0.0,
+            "staleness_max": int(max(hist.staleness)) if hist.staleness else 0}
+
+
+def acc_at_time_budget(result: Dict, budget: float) -> float:
+    """Test accuracy reached within a fixed simulated communication time."""
+    best = 0.0
+    for t, a in zip(result["times"], result["acc"]):
+        if t <= budget:
+            best = max(best, a)
+    return best

@@ -1,0 +1,187 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  fig2a_concurrency   — active-client ratio, async vs sync (Figure 2a)
+  fig2b_mnist         — 8-algorithm personalized accuracy, hetero MNIST-like
+                        within a fixed communication-time budget (Figure 2b)
+  fig2c_cifar         — same on CIFAR-like data (Figure 2c)
+  table1_staleness    — FedAsync convergence vs maximum delay τ (Table 1's
+                        O(1/√T)+O(τ²/T) staleness term, empirically)
+  kernels             — Pallas kernels (interpret) vs jnp oracle, µs/call
+
+Prints ``name,us_per_call,derived`` CSV lines (plus per-figure CSV blocks).
+Env: BENCH_FAST=1 shrinks rounds for smoke runs.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2a,kernels]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (ALGOS, FAST, acc_at_time_budget, run_algo,
+                               setup)
+
+OUT_DIR = "experiments/bench"
+
+
+def _save(name, obj):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=2)
+
+
+def fig2a_concurrency():
+    """Figure 2a: proportion of active users, async vs sync."""
+    clients, params, loss, acc, ev = setup("mnist", n_clients=30)
+    r_async = run_algo("fedasync", clients, params, loss, None,
+                       async_rounds=60 if FAST else 150)
+    r_sync = run_algo("fedavg", clients, params, loss, None,
+                      sync_rounds=6 if FAST else 15)
+    print("fig2a,algo,mean_active_ratio")
+    print(f"fig2a,async,{r_async['mean_active_ratio']:.3f}")
+    print(f"fig2a,sync,{r_sync['mean_active_ratio']:.3f}")
+    derived = r_async["mean_active_ratio"] - r_sync["mean_active_ratio"]
+    print(f"fig2a_concurrency,{(r_async['wall_s']+r_sync['wall_s'])*1e6:.0f},"
+          f"{derived:.3f}")
+    _save("fig2a", {"async": r_async, "sync": r_sync})
+    return derived
+
+
+def _figure2(kind: str):
+    clients, params, loss, acc, ev = setup(kind, n_clients=30)
+    async_rounds = 60 if FAST else 160
+    sync_rounds = 8 if FAST else 24
+    results = {}
+    for algo in ALGOS:
+        r = run_algo(algo, clients, params, loss, ev,
+                     async_rounds=async_rounds, sync_rounds=sync_rounds)
+        results[algo] = r
+        print(f"fig2_{kind},{algo},final_acc={r['acc'][-1]:.3f},"
+              f"wall={r['wall_s']:.0f}s", flush=True)
+    # equal simulated-communication-time budget (paper: fixed time window)
+    budget = min(max(r["times"]) for r in results.values() if r["times"])
+    print(f"fig2_{kind},time_budget,{budget:.0f}")
+    print(f"fig2_{kind},algo,acc_at_budget")
+    for algo, r in results.items():
+        print(f"fig2_{kind},{algo},{acc_at_time_budget(r, budget):.3f}")
+    _save(f"fig2_{kind}", {k: v for k, v in results.items()})
+    return results, budget
+
+
+def fig2b_mnist():
+    results, budget = _figure2("mnist")
+    ours = max(acc_at_time_budget(results[a], budget)
+               for a in ("persafl-maml", "persafl-me"))
+    base = max(acc_at_time_budget(results[a], budget)
+               for a in ("fedavg", "fedasync", "fedprox", "scaffold"))
+    print(f"fig2b_mnist,0,{ours - base:.3f}")
+    return results
+
+
+def fig2c_cifar():
+    results, budget = _figure2("cifar")
+    ours = max(acc_at_time_budget(results[a], budget)
+               for a in ("persafl-maml", "persafl-me"))
+    base = max(acc_at_time_budget(results[a], budget)
+               for a in ("fedavg", "fedasync", "fedprox", "scaffold"))
+    print(f"fig2c_cifar,0,{ours - base:.3f}")
+    return results
+
+
+def table1_staleness():
+    """Empirical staleness tolerance: FedAsync accuracy vs delay scale."""
+    from repro.core import PersAFLConfig
+    from repro.fl import AsyncSimulator, DelayModel
+    clients, params, loss, acc, ev = setup("mnist", n_clients=20)
+    rounds = 60 if FAST else 120
+    rows = []
+    for scale in (1.0, 4.0, 16.0):
+        pcfg = PersAFLConfig(option="A", q_local=5, eta=0.01)
+        sim = AsyncSimulator(clients=clients, loss_fn=loss,
+                             init_params=params, pcfg=pcfg,
+                             delays=DelayModel(len(clients), seed=1,
+                                               scale=scale,
+                                               jitter=(0.2, 3.0)),
+                             batch_size=16, seed=0)
+        h = sim.run(max_server_rounds=rounds, eval_every=rounds, eval_fn=ev)
+        tau = max(h.staleness) if h.staleness else 0
+        rows.append({"delay_scale": scale, "tau_max": tau,
+                     "acc": h.acc[-1] if h.acc else 0.0})
+        print(f"table1,scale={scale},tau_max={tau},acc={rows[-1]['acc']:.3f}",
+              flush=True)
+    _save("table1_staleness", rows)
+    # derived: accuracy degradation from smallest to largest tau
+    print(f"table1_staleness,0,{rows[0]['acc'] - rows[-1]['acc']:.3f}")
+    return rows
+
+
+def kernels():
+    """µs/call for each Pallas kernel (interpret) and its jnp oracle."""
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.ssd.kernel import ssd_fwd
+    from repro.kernels.ssd.ref import ssd_ref
+    from repro.kernels.fused_update import kernel as FK, ref as FR
+
+    def timeit(fn, n=3):
+        jax.block_until_ready(fn())  # warm
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        return (time.time() - t0) / n * 1e6
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    t_kern = timeit(lambda: flash_attention_fwd(q, k, v, interpret=True))
+    t_ref = timeit(lambda: attention_ref(q, k, v))
+    print(f"kernel_flash_attention,{t_kern:.0f},ref_us={t_ref:.0f}")
+
+    x = jax.random.normal(ks[0], (1, 256, 8, 64))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 256, 8)))
+    a_log = jnp.log(jnp.linspace(1, 8, 8))
+    Bm = jax.random.normal(ks[2], (1, 256, 1, 32))
+    Cm = jax.random.normal(ks[3], (1, 256, 1, 32))
+    t_kern = timeit(lambda: ssd_fwd(x, dt, a_log, Bm, Cm, chunk=64,
+                                    interpret=True))
+    t_ref = timeit(lambda: ssd_ref(x, dt, a_log, Bm, Cm))
+    print(f"kernel_ssd,{t_kern:.0f},ref_us={t_ref:.0f}")
+
+    w = jax.random.normal(ks[0], (1 << 20,))
+    g = jax.random.normal(ks[1], (1 << 20,))
+    t_kern = timeit(lambda: FK.sgd_step(w, g, 0.01))
+    t_ref = timeit(lambda: FR.sgd_step_ref(w, g, 0.01))
+    print(f"kernel_fused_update,{t_kern:.0f},ref_us={t_ref:.0f}")
+
+
+BENCHES = {
+    "fig2a": fig2a_concurrency,
+    "fig2b": fig2b_mnist,
+    "fig2c": fig2c_cifar,
+    "table1": table1_staleness,
+    "kernels": kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args, _ = ap.parse_known_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        BENCHES[name]()
+        print(f"bench_{name}_total,{(time.time()-t0)*1e6:.0f},ok", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: PersA-FL-ME on heterogeneous synthetic MNIST in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.paper_models import MNIST_CNN
+from repro.core import PersAFLConfig
+from repro.data import make_federated_dataset
+from repro.fl import AsyncSimulator, DelayModel, make_personalized_eval
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+
+
+def main():
+    # 1. heterogeneous federated data: 10 clients, 5-of-10 classes each
+    clients = make_federated_dataset("mnist", n_clients=10,
+                                     classes_per_client=5, seed=0)
+    print("client class skews:", [c.classes for c in clients[:3]], "...")
+
+    # 2. the paper's CNN + personalized evaluation (same fine-tuning budget
+    #    for every method, §5)
+    params = init_cnn(MNIST_CNN, jax.random.PRNGKey(0))
+    loss = lambda p, b: cnn_loss(MNIST_CNN, p, b, train=False)
+    acc = lambda p, b: cnn_accuracy(MNIST_CNN, p, b)
+    evaluate = make_personalized_eval(loss, acc, clients, ft_steps=1,
+                                      ft_lr=0.01)
+    print(f"personalized accuracy before training: {evaluate(params):.3f}")
+
+    # 3. PersA-FL, Option C (Moreau envelope), asynchronous server
+    pcfg = PersAFLConfig(option="C", q_local=10, eta=0.01, lam=25.0,
+                         inner_steps=10, inner_eta=0.02)
+    sim = AsyncSimulator(clients=clients, loss_fn=loss, init_params=params,
+                         pcfg=pcfg, delays=DelayModel(len(clients)),
+                         batch_size=16, seed=0)
+    hist = sim.run(max_server_rounds=60, eval_every=20, eval_fn=evaluate)
+
+    print("accuracy trajectory:", [round(a, 3) for a in hist.acc])
+    print(f"mean active-client ratio: {np.mean(hist.active_ratio):.2f} "
+          f"(paper Fig. 2a: ~0.8 for async)")
+    print(f"max staleness observed: {max(hist.staleness)} "
+          f"(Assumption 1's tau)")
+
+
+if __name__ == "__main__":
+    main()

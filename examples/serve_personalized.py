@@ -1,0 +1,14 @@
+"""Personalized serving: ME-personalize a Mamba2 LM on a client's token
+stream (Option C's θ̃_i(w)), then decode batched requests with the SSM
+recurrent cache.
+
+    PYTHONPATH=src python examples/serve_personalized.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "mamba2-130m", "--smoke",
+                "--personalize", "--requests", "4", "--tokens", "16"]
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.store import (save_pytree, load_pytree,      # noqa: F401
+                                    save_server_state, load_server_state)

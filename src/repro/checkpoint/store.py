@@ -1,0 +1,75 @@
+"""npz-based pytree checkpointing (no orbax dependency).
+
+Pytrees are flattened to ``path/to/leaf``-keyed arrays; structure (dicts,
+lists, dataclass-free) round-trips from the key paths.  Server state
+(PersA-FL version counters) is stored alongside the params.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node)
+        if keys and all(k.startswith("#") for k in keys):
+            items = sorted(keys, key=lambda s: int(s[1:]))
+            return [rebuild(node[k]) for k in items]
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+def save_pytree(path: str, tree, meta: Dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.tree.map(np.asarray, tree))
+    np.savez(path, **flat)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2, default=str)
+
+
+def load_pytree(path: str):
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten(flat)
+
+
+def save_server_state(path: str, state: Dict, meta: Dict | None = None):
+    save_pytree(path, state, meta)
+
+
+def load_server_state(path: str) -> Dict:
+    return load_pytree(path)

@@ -1,0 +1,25 @@
+"""codeqwen1.5-7b [dense] — Qwen1.5 architecture.
+
+32L d_model=4096 32H (GQA kv=32) d_ff=13440 vocab=92416.
+Source: [hf:Qwen/CodeQwen1.5-7B].  QKV bias per Qwen1.5 family.
+Pure full attention -> skips long_500k (DESIGN.md §4).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="codeqwen1.5-7b",
+    family="dense",
+    source="hf:Qwen/CodeQwen1.5-7B",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=13440,
+    vocab=92416,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    train_microbatches=4,
+    skip_shapes=("long_500k",),
+    persafl_option="C",
+    maml_mode="full",
+)

@@ -1,0 +1,33 @@
+"""deepseek-v3-671b [moe] — MLA + 1 shared + 256 routed top-8 experts + MTP.
+
+61L d_model=7168 128H (GQA kv=128) d_ff=2048 (expert) vocab=129280.
+Source: [arXiv:2412.19437] (DeepSeek-V3).
+
+MLA (multi-head latent attention): q_lora 1536, kv_lora 512, nope 128 /
+rope 64 head dims, v 128.  First 3 layers dense (d_ff 18432).  MTP: one
+extra multi-token-prediction block at train time.
+Pure full attention -> skips long_500k (DESIGN.md §4).
+"""
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    arch_id="deepseek-v3-671b",
+    family="moe",
+    source="arXiv:2412.19437",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=2048,
+    vocab=129280,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=256, top_k=8, expert_d_ff=2048,
+                  n_shared_experts=1, shared_d_ff=2048,
+                  first_k_dense=3, dense_d_ff=18432),
+    use_mtp=True,
+    train_microbatches=16,
+    skip_shapes=("long_500k",),
+    persafl_option="C",       # ME: first-order only; MoE top-k non-smoothness noted
+    maml_mode="fo",
+)

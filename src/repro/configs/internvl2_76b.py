@@ -1,0 +1,28 @@
+"""internvl2-76b [vlm] — InternViT (stub) + InternLM2-style 70B+ language model.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+Source: [arXiv:2404.16821] (InternVL 1.5/2 series).
+
+Per the assignment carve-out, the vision encoder + projector are a STUB:
+``input_specs()`` supplies precomputed patch embeddings (n_visual_tokens
+positions) which are prepended to the text embeddings; we implement the
+language/decoder backbone.  Pure full attention -> skips long_500k.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="internvl2-76b",
+    family="vlm",
+    source="arXiv:2404.16821",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=128256,
+    n_visual_tokens=1024,
+    train_microbatches=16,
+    skip_shapes=("long_500k",),
+    persafl_option="C",
+    maml_mode="fo",
+)

@@ -1,0 +1,23 @@
+"""minitron-8b [dense] — pruned Nemotron.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.
+Source: [arXiv:2407.14679] (Minitron: compact LMs via pruning+distillation).
+Pure full attention -> skips long_500k (DESIGN.md §4).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="minitron-8b",
+    family="dense",
+    source="arXiv:2407.14679",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=256000,
+    train_microbatches=4,
+    skip_shapes=("long_500k",),
+    persafl_option="C",
+    maml_mode="full",
+)

@@ -1,0 +1,45 @@
+"""The paper's own experimental models (§5 / Appendix D).
+
+MNIST: 2-layer CNN + 2 FC layers; CIFAR-10: 3-layer CNN + 3 FC layers,
+pooling + dropout + cross-entropy [39].  These are the models PersA-FL's
+experimental claims are made on; we reproduce them (as pure-JAX functional
+models in ``repro.models.cnn``) alongside the assigned LLM architectures.
+
+Channel/width counts are scaled to this container's single CPU core (the
+paper does not pin them; the ell-conv + ell-fc structure, pooling, dropout
+and CE loss are preserved) — recorded in DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    image_size: int
+    channels: int
+    n_classes: int
+    conv_channels: Tuple[int, ...]
+    fc_sizes: Tuple[int, ...]
+    dropout: float = 0.25
+
+
+MNIST_CNN = CNNConfig(
+    name="paper-mnist-cnn",
+    image_size=28,
+    channels=1,
+    n_classes=10,
+    conv_channels=(8, 16),      # ell = 2 conv layers
+    fc_sizes=(64, 10),          # 2 fully connected layers
+)
+
+CIFAR_CNN = CNNConfig(
+    name="paper-cifar-cnn",
+    image_size=32,
+    channels=3,
+    n_classes=10,
+    conv_channels=(16, 32, 32),  # ell = 3 conv layers
+    fc_sizes=(128, 64, 10),      # 3 fully connected layers
+)

@@ -1,0 +1,25 @@
+"""qwen1.5-110b [dense] — QKV bias (Qwen1.5 family).
+
+80L d_model=8192 64H (GQA kv=8) d_ff=49152 vocab=152064.
+Source: [hf:Qwen/Qwen1.5-0.5B] (family card; 110B scaling per assignment).
+Pure full attention -> skips long_500k (DESIGN.md §4).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen1.5-110b",
+    family="dense",
+    source="hf:Qwen/Qwen1.5-0.5B",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=49152,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    train_microbatches=16,
+    skip_shapes=("long_500k",),
+    persafl_option="C",
+    maml_mode="fo",
+)

@@ -1,0 +1,32 @@
+"""whisper-large-v3 [audio] — encoder-decoder with stubbed conv frontend.
+
+32L (decoder) d_model=1280 20H (kv=20) d_ff=5120 vocab=51866.
+Source: [arXiv:2212.04356] (Whisper).
+
+Per the assignment carve-out the mel-spectrogram + conv feature extractor is
+a STUB: ``input_specs()`` provides precomputed frame embeddings
+(enc_len=1500, i.e. 30 s of audio) consumed by a 32-layer bidirectional
+encoder; the 32-layer decoder cross-attends to it.  Decode shapes lower the
+decoder ``serve_step`` with a self-attn KV cache of the shape's seq_len plus
+the fixed cross-attn cache.  long_500k skipped (full attention).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="whisper-large-v3",
+    family="audio",
+    source="arXiv:2212.04356",
+    n_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=51866,
+    is_encdec=True,
+    enc_layers=32,
+    enc_len=1500,
+    train_microbatches=2,
+    skip_shapes=("long_500k",),
+    persafl_option="C",
+    maml_mode="full",
+)

@@ -1,0 +1,30 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention blocks.
+
+38L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=32000, ssm_state=64.
+Source: [arXiv:2411.15242] (Zamba2 technical report).
+
+Hybrid: Mamba2 layers, with a single *shared* transformer (attn+MLP) block
+applied every ``attn_every`` layers on concat(hidden, original embedding)
+(see DESIGN.md §4).  Sub-quadratic: runs ``long_500k`` (shared attention uses
+a sliding window at that shape).
+"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    arch_id="zamba2-1.2b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32000,
+    head_dim=64,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4, chunk=128),
+    attn_every=6,
+    sliding_window=4096,       # used by the shared attn block for long_500k
+    train_microbatches=2,
+    persafl_option="C",
+    maml_mode="hf",            # HVP-through-scan avoided (paper Eq. D1)
+)

@@ -1,0 +1,87 @@
+"""Algorithm 2 — client local update (Q steps, Options A/B/C).
+
+The Q-step loop is a ``lax.scan`` carrying the *accumulated delta* rather
+than a second parameter copy: w_q = w₀ − Δ_q and Δ_{q+1} = Δ_q + η ∇̃ — the
+exact telescoping of Algorithm 2 (Δ = w_{i,0} − w_{i,Q} = η Σ_q ∇̃), but
+with peak memory 2× params instead of 3× (DESIGN.md §2).  Δ accumulates in
+f32 even when params are bf16.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import maml as maml_mod
+from repro.core import moreau as me_mod
+from repro.core.maml import tree_norm
+from repro.core.types import PersAFLConfig
+
+Loss = Callable
+
+
+def _zeros_f32(params, dtype=jnp.float32):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype), params)
+
+
+def _current_w(params, delta):
+    return jax.tree.map(lambda p, d: (p.astype(jnp.float32)
+                                      - d.astype(jnp.float32)).astype(p.dtype),
+                        params, delta)
+
+
+def client_update(pcfg: PersAFLConfig, loss_fn: Loss, params,
+                  batches) -> Tuple:
+    """Run Q local steps; return (delta pytree [f32], metrics dict).
+
+    ``batches``: pytree whose leaves have leading dim Q (Options A/C) or a
+    dict {"d","dp","dpp"} of three such pytrees (Option B, paper's three
+    independent batches D, D′, D″).
+    """
+    option = pcfg.option
+
+    def step(delta, batch_q):
+        w = _current_w(params, delta)
+        nu = jnp.zeros((), jnp.float32)
+        if option == "A":
+            g = jax.grad(loss_fn)(w, batch_q)
+        elif option == "B":
+            g = maml_mod.maml_grad(loss_fn, w, batch_q["d"], batch_q["dp"],
+                                   batch_q["dpp"], pcfg.alpha,
+                                   mode=pcfg.maml_mode,
+                                   hf_delta=pcfg.hf_delta)
+        elif option == "C":
+            g, nu = me_mod.me_grad(loss_fn, w, batch_q, pcfg.lam,
+                                   pcfg.inner_eta, pcfg.inner_steps)
+        else:
+            raise ValueError(f"unknown option {option!r}")
+        delta = jax.tree.map(
+            lambda d, gg: (d.astype(jnp.float32)
+                           + pcfg.eta * gg.astype(jnp.float32))
+            .astype(d.dtype), delta, g)
+        return delta, (tree_norm(g), nu)
+
+    acc_dtype = jnp.dtype(pcfg.delta_dtype)
+    delta, (gnorms, nus) = jax.lax.scan(step, _zeros_f32(params, acc_dtype),
+                                        batches)
+    metrics = {"grad_norm_mean": jnp.mean(gnorms),
+               "delta_norm": tree_norm(delta),
+               "nu_mean": jnp.mean(nus)}
+    return delta, metrics
+
+
+def split_batches_for_option(option: str, batches_3q):
+    """Adapt a 3Q-leading-dim batch pytree to the option's layout.
+
+    Data pipeline always yields 3Q batches so all options consume the same
+    stream; A/C use the first Q, B uses the (D, D′, D″) triple split.
+    """
+    q3 = jax.tree.leaves(batches_3q)[0].shape[0]
+    q = q3 // 3
+    first = jax.tree.map(lambda x: x[:q], batches_3q)
+    if option in ("A", "C"):
+        return first
+    second = jax.tree.map(lambda x: x[q:2 * q], batches_3q)
+    third = jax.tree.map(lambda x: x[2 * q:], batches_3q)
+    return {"d": first, "dp": second, "dpp": third}

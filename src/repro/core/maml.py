@@ -1,0 +1,67 @@
+"""Option B — MAML personalized gradient estimators (paper Eq. 5 & 9).
+
+∇F_i(w) = [I − α ∇²f_i(w; D″)] ∇f_i(w − α ∇f_i(w; D′); D)
+
+Three estimators (paper §2.2 & Appendix D):
+  * ``full`` — exact Hessian-vector product via forward-over-reverse
+    (jvp of grad).  The paper computes ∇²f̃·v with a stochastic Hessian; the
+    JAX HVP is the same quantity without materializing the Hessian.
+  * ``fo``   — FO-MAML: drop the Hessian term.
+  * ``hf``   — HF-MAML (paper Eq. D1): central finite difference
+    ∇²f(w)u ≈ [∇f(w+δu) − ∇f(w−δu)] / (2δ), direction-normalised.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Loss = Callable  # loss_fn(params, batch) -> scalar
+
+
+def _axpy(a: float, x, y):
+    """y + a*x over pytrees (computed in the params' dtype)."""
+    return jax.tree.map(lambda xx, yy: yy + a * xx, x, y)
+
+
+def tree_dot(x, y):
+    return sum(jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32))
+               for a, b in zip(jax.tree.leaves(x), jax.tree.leaves(y)))
+
+
+def tree_norm(x):
+    return jnp.sqrt(tree_dot(x, x))
+
+
+def maml_grad(loss_fn: Loss, params, batch, batch_prime, batch_dprime,
+              alpha: float, mode: str = "full", hf_delta: float = 1e-2):
+    """Stochastic MAML gradient (Eq. 9). Returns a pytree like ``params``."""
+    g_inner = jax.grad(loss_fn)(params, batch_prime)
+    adapted = _axpy(-alpha, g_inner, params)
+    g_outer = jax.grad(loss_fn)(adapted, batch)
+    if mode == "fo" or alpha == 0.0:
+        return g_outer
+    if mode == "full":
+        # HVP at w on batch D'': ∇²f(w; D'') @ g_outer
+        hvp = jax.jvp(lambda p: jax.grad(loss_fn)(p, batch_dprime),
+                      (params,), (g_outer,))[1]
+        return _axpy(-alpha, hvp, g_outer)
+    if mode == "hf":
+        # normalize the direction for numerical stability, rescale after
+        nrm = tree_norm(g_outer)
+        safe = jnp.maximum(nrm, 1e-12)
+        u = jax.tree.map(lambda g: (g / safe).astype(g.dtype), g_outer)
+        gp = jax.grad(loss_fn)(_axpy(hf_delta, u, params), batch_dprime)
+        gm = jax.grad(loss_fn)(_axpy(-hf_delta, u, params), batch_dprime)
+        fd = jax.tree.map(
+            lambda a, b: ((a - b) * (nrm / (2.0 * hf_delta))).astype(a.dtype),
+            gp, gm)
+        return _axpy(-alpha, fd, g_outer)
+    raise ValueError(f"unknown maml mode {mode!r}")
+
+
+def personalize_maml(loss_fn: Loss, params, batch, alpha: float):
+    """Client-side fine-tuning: one SGD step (the paper's evaluation budget)."""
+    g = jax.grad(loss_fn)(params, batch)
+    return _axpy(-alpha, g, params)

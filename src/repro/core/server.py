@@ -1,0 +1,68 @@
+"""Algorithm 1 — asynchronous server.
+
+Paper-faithful mode: on receiving Δ from any client, immediately
+``w ← w − β Δ`` and bump the version counter t.  Staleness bookkeeping
+(Assumption 1) tracks τ = t − Ω(t) per applied update.
+
+Beyond-paper (FedBuff [51]; unbounded-gradient analysis [63]): a buffered
+variant aggregates M deltas then applies their mean once — on the TPU mesh
+this is one psum over the cohort axes per round (DESIGN.md §2/§5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PersAFLConfig
+
+
+def init_server_state(params) -> Dict:
+    return {
+        "params": params,
+        "t": jnp.zeros((), jnp.int32),
+        "staleness_sum": jnp.zeros((), jnp.float32),
+        "staleness_max": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply_update(state: Dict, delta, beta: float, staleness) -> Dict:
+    """Paper-faithful single-delta apply (Algorithm 1 step 4)."""
+    staleness = jnp.asarray(staleness, jnp.int32)
+    params = jax.tree.map(
+        lambda w, d: (w.astype(jnp.float32) - beta * d.astype(jnp.float32))
+        .astype(w.dtype), state["params"], delta)
+    return {
+        "params": params,
+        "t": state["t"] + 1,
+        "staleness_sum": state["staleness_sum"] + staleness.astype(jnp.float32),
+        "staleness_max": jnp.maximum(state["staleness_max"], staleness),
+    }
+
+
+def apply_buffered(state: Dict, delta_sum, count, beta: float,
+                   staleness_max) -> Dict:
+    """FedBuff-style buffered apply: w ← w − β/M Σ Δ (one server round).
+
+    ``delta_sum`` is typically the result of a psum over the cohort mesh
+    axes; ``count`` the number of contributing clients M.
+    """
+    scale = beta / jnp.maximum(count.astype(jnp.float32), 1.0)
+    params = jax.tree.map(
+        lambda w, d: (w.astype(jnp.float32) - scale * d.astype(jnp.float32))
+        .astype(w.dtype), state["params"], delta_sum)
+    return {
+        "params": params,
+        "t": state["t"] + count.astype(jnp.int32),
+        "staleness_sum": state["staleness_sum"],
+        "staleness_max": jnp.maximum(state["staleness_max"],
+                                     jnp.asarray(staleness_max, jnp.int32)),
+    }
+
+
+def staleness_stats(state: Dict) -> Dict:
+    t = jnp.maximum(state["t"].astype(jnp.float32), 1.0)
+    return {"mean_staleness": state["staleness_sum"] / t,
+            "max_staleness": state["staleness_max"],
+            "server_rounds": state["t"]}

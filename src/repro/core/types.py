@@ -1,0 +1,38 @@
+"""PersA-FL hyper-parameter container (Algorithms 1 & 2 of the paper)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PersAFLConfig:
+    """Hyper-parameters of Algorithms 1 & 2.
+
+    option: "A" (FedAsync), "B" (PersA-FL-MAML), "C" (PersA-FL-ME).
+    """
+    option: str = "A"
+    q_local: int = 10          # Q local steps (paper §5 uses Q=10)
+    eta: float = 0.01          # local stepsize η (paper Appendix D)
+    beta: float = 1.0          # server stepsize β (Theorems use β=1)
+
+    # Option B (MAML)
+    alpha: float = 0.01        # personalization stepsize α
+    maml_mode: str = "full"    # full | fo | hf
+    hf_delta: float = 1e-2     # finite-difference δ (paper Eq. D1)
+
+    # Option C (Moreau envelope)
+    lam: float = 30.0          # λ regularization (paper picks from {20,25,30})
+    inner_steps: int = 10      # K inner SGD steps for θ̃ (paper Appendix D)
+    inner_eta: float = 0.03    # inner solver stepsize
+    nu_target: float = 1e-3    # ν accuracy target (reported, not enforced)
+
+    # beyond-paper: buffered server aggregation (FedBuff [51,63])
+    buffer_size: int = 1       # 1 = paper-faithful immediate apply
+    # delta accumulator dtype ("float32" faithful; "bfloat16" halves the
+    # client-delta memory/traffic on multi-B-param archs — §Perf knob)
+    delta_dtype: str = "float32"
+
+    def personalize_budget(self) -> str:
+        return {"A": "none", "B": f"1 SGD step @ alpha={self.alpha}",
+                "C": f"{self.inner_steps} prox steps @ lambda={self.lam}"}[
+                    self.option]

@@ -1,0 +1,2 @@
+from repro.data.federated import (ClientData, make_federated_dataset,  # noqa: F401
+                                  sample_batches, synthetic_token_batch)

@@ -1,0 +1,3 @@
+from repro.fl.delays import DelayModel                       # noqa: F401
+from repro.fl.simulator import AsyncSimulator, SyncSimulator, History  # noqa: F401
+from repro.fl.evaluate import make_personalized_eval          # noqa: F401

@@ -1,0 +1,63 @@
+"""Baseline local-update rules the paper compares against (§5):
+
+FedAvg / FedAsync / Per-FedAvg / pFedMe reuse Algorithm 2's Options A/B/C.
+FedProx and SCAFFOLD (Option I) need bespoke local steps, implemented here
+with the same scanned-delta structure as ``repro.core.client``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.client import _current_w, _zeros_f32
+from repro.core.maml import tree_norm
+from repro.core.types import PersAFLConfig
+
+Loss = Callable
+
+
+def fedprox_update(pcfg: PersAFLConfig, loss_fn: Loss, params, batches,
+                   mu: float = 0.1) -> Tuple:
+    """FedProx [42]: local SGD on f_i(w) + μ/2 ‖w − w^t‖²."""
+    def step(delta, batch_q):
+        w = _current_w(params, delta)
+        g = jax.grad(loss_fn)(w, batch_q)
+        # prox term: ∇ μ/2‖w − w0‖² = μ(w − w0) = −μ·Δ
+        g = jax.tree.map(lambda gg, d: gg + (-mu * d).astype(gg.dtype),
+                         g, delta)
+        delta = jax.tree.map(
+            lambda d, gg: d + pcfg.eta * gg.astype(jnp.float32), delta, g)
+        return delta, tree_norm(g)
+
+    delta, gnorms = jax.lax.scan(step, _zeros_f32(params), batches)
+    return delta, {"grad_norm_mean": jnp.mean(gnorms),
+                   "delta_norm": tree_norm(delta)}
+
+
+def scaffold_update(pcfg: PersAFLConfig, loss_fn: Loss, params, batches,
+                    c_global, c_i) -> Tuple:
+    """SCAFFOLD [34] (Option I) local update.
+
+    w ← w − η (g − c_i + c);   c_i⁺ = ∇f_i(w^t) (fresh pass at the server
+    model, the paper's more-stable Option I);  Δc = c_i⁺ − c_i.
+    Returns (delta, new_c_i, metrics).
+    """
+    def step(delta, batch_q):
+        w = _current_w(params, delta)
+        g = jax.grad(loss_fn)(w, batch_q)
+        g = jax.tree.map(
+            lambda gg, ci, cg: gg + (cg - ci).astype(gg.dtype),
+            g, c_i, c_global)
+        delta = jax.tree.map(
+            lambda d, gg: d + pcfg.eta * gg.astype(jnp.float32), delta, g)
+        return delta, tree_norm(g)
+
+    delta, gnorms = jax.lax.scan(step, _zeros_f32(params), batches)
+    # Option I: c_i+ = grad at the *server* model on one more data pass
+    first_batch = jax.tree.map(lambda x: x[0], batches)
+    c_new = jax.tree.map(lambda g: g.astype(jnp.float32),
+                         jax.grad(loss_fn)(params, first_batch))
+    return delta, c_new, {"grad_norm_mean": jnp.mean(gnorms),
+                          "delta_norm": tree_norm(delta)}

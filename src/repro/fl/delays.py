@@ -1,0 +1,39 @@
+"""Client communication-delay models (paper §5).
+
+Per client: a mean download delay, and an upload delay 4–6× larger on
+average; each round's realized delay is the mean scaled by uniform noise.
+Local compute time is negligible relative to communication (paper §5
+assumption).  ``scale`` inflates all delays (the staleness-sweep benchmark
+turns this knob).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DelayModel:
+    n_clients: int
+    seed: int = 0
+    down_range: Tuple[float, float] = (1.0, 3.0)
+    up_factor_range: Tuple[float, float] = (4.0, 6.0)
+    jitter: Tuple[float, float] = (0.5, 1.5)
+    scale: float = 1.0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        self.mean_down = rng.uniform(*self.down_range, size=self.n_clients)
+        self.up_factor = rng.uniform(*self.up_factor_range,
+                                     size=self.n_clients)
+        self._rng = np.random.RandomState(self.seed + 1)
+
+    def sample_download(self, i: int) -> float:
+        return float(self.scale * self.mean_down[i]
+                     * self._rng.uniform(*self.jitter))
+
+    def sample_upload(self, i: int) -> float:
+        return float(self.scale * self.mean_down[i] * self.up_factor[i]
+                     * self._rng.uniform(*self.jitter))

@@ -1,0 +1,220 @@
+"""Discrete-event federated-learning simulator.
+
+Reproduces the paper's §5 communication setup: n clients with random
+upload/download delays (upload 4–6× download), communication time dominating
+local compute.  The simulator drives the *same jitted client/server step
+functions* as the production launcher — only event ordering is simulated
+(DESIGN.md §2).
+
+Two schedulers:
+  * :class:`AsyncSimulator` — Algorithm 1: the server applies each client's
+    Δ the moment it arrives; staleness τ is measured per update.
+  * :class:`SyncSimulator`  — FedAvg-family rounds: sample m clients, wait
+    for the slowest, apply the averaged Δ (supports FedAvg / Per-FedAvg /
+    pFedMe / FedProx / SCAFFOLD via ``algo``).
+
+Both record the active-client ratio over time (paper Figure 2a) and
+accuracy-vs-simulated-time via a pluggable eval callback.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PersAFLConfig, apply_update, client_update,
+                        init_server_state, split_batches_for_option)
+from repro.core.server import staleness_stats
+from repro.data.federated import ClientData, sample_batches
+from repro.fl.algorithms import fedprox_update, scaffold_update
+from repro.fl.delays import DelayModel
+
+
+@dataclasses.dataclass
+class History:
+    times: List[float] = dataclasses.field(default_factory=list)
+    rounds: List[int] = dataclasses.field(default_factory=list)
+    acc: List[float] = dataclasses.field(default_factory=list)
+    active_times: List[float] = dataclasses.field(default_factory=list)
+    active_ratio: List[float] = dataclasses.field(default_factory=list)
+    staleness: List[int] = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class AsyncSimulator:
+    """PersA-FL / FedAsync event-driven runner (Algorithms 1 & 2)."""
+
+    def __init__(self, *, clients: List[ClientData], loss_fn: Callable,
+                 init_params, pcfg: PersAFLConfig, delays: DelayModel,
+                 batch_size: int = 32, seed: int = 0):
+        self.clients = clients
+        self.pcfg = pcfg
+        self.delays = delays
+        self.batch_size = batch_size
+        self.rng = np.random.RandomState(seed)
+        self.loss_fn = loss_fn
+        self.state = init_server_state(init_params)
+
+        def _update(params, batches_3q):
+            batches = split_batches_for_option(pcfg.option, batches_3q)
+            return client_update(pcfg, loss_fn, params, batches)
+
+        self._jit_update = jax.jit(_update)
+
+    def _sample(self, i: int):
+        return sample_batches(self.clients[i], self.rng,
+                              3 * self.pcfg.q_local, self.batch_size)
+
+    def run(self, *, max_server_rounds: int, eval_every: int = 50,
+            eval_fn: Optional[Callable] = None,
+            record_active_every: float = 5.0) -> History:
+        hist = History()
+        n = len(self.clients)
+        heap: List = []
+        seq = 0
+        # phase[i]: ("down"|"up", finish_time); download requests start at t=0
+        for i in range(n):
+            t_done = self.delays.sample_download(i)
+            heapq.heappush(heap, (t_done, seq, "down_done", i, None))
+            seq += 1
+        now = 0.0
+        next_active_t = 0.0
+        busy_up = {i: None for i in range(n)}  # upload finish times
+
+        while self.state["t"] < max_server_rounds and heap:
+            now, _, kind, i, payload = heapq.heappop(heap)
+            # record active ratio on a time grid: active = computing/uploading
+            while next_active_t <= now:
+                up_now = sum(1 for v in busy_up.values()
+                             if v is not None and v > next_active_t)
+                hist.active_times.append(next_active_t)
+                hist.active_ratio.append(up_now / n)
+                next_active_t += record_active_every
+            if kind == "down_done":
+                version = int(self.state["t"])
+                delta, _ = self._jit_update(self.state["params"],
+                                            self._sample(i))
+                t_up = now + self.delays.sample_upload(i)
+                busy_up[i] = t_up
+                heapq.heappush(heap, (t_up, seq, "up_done", i,
+                                      (delta, version)))
+                seq += 1
+            elif kind == "up_done":
+                delta, version = payload
+                staleness = int(self.state["t"]) - version
+                hist.staleness.append(staleness)
+                self.state = apply_update(self.state, delta, self.pcfg.beta,
+                                          staleness)
+                busy_up[i] = None
+                t_round = int(self.state["t"])
+                if eval_fn is not None and t_round % eval_every == 0:
+                    hist.times.append(now)
+                    hist.rounds.append(t_round)
+                    hist.acc.append(float(eval_fn(self.state["params"])))
+                t_down = now + self.delays.sample_download(i)
+                heapq.heappush(heap, (t_down, seq, "down_done", i, None))
+                seq += 1
+        self.final_stats = jax.tree.map(np.asarray,
+                                        staleness_stats(self.state))
+        return hist
+
+
+class SyncSimulator:
+    """Synchronous rounds (FedAvg-family baselines, paper Figure 2)."""
+
+    def __init__(self, *, clients: List[ClientData], loss_fn: Callable,
+                 init_params, pcfg: PersAFLConfig, delays: DelayModel,
+                 algo: str = "fedavg", clients_per_round: int = 10,
+                 batch_size: int = 32, seed: int = 0,
+                 fedprox_mu: float = 0.1):
+        self.clients = clients
+        self.pcfg = pcfg
+        self.delays = delays
+        self.algo = algo
+        self.m = clients_per_round
+        self.batch_size = batch_size
+        self.rng = np.random.RandomState(seed)
+        self.loss_fn = loss_fn
+        self.params = init_params
+        if algo == "scaffold":
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 init_params)
+            self.c_global = zeros
+            self.c_clients = [zeros for _ in clients]
+
+        option = {"fedavg": "A", "perfedavg": "B", "pfedme": "C",
+                  "fedprox": "A", "scaffold": "A"}[algo]
+        pcfg_local = dataclasses.replace(pcfg, option=option)
+        self.pcfg_local = pcfg_local
+
+        if algo == "fedprox":
+            self._jit = jax.jit(lambda p, b: fedprox_update(
+                pcfg_local, loss_fn, p,
+                jax.tree.map(lambda x: x[:pcfg.q_local], b), mu=fedprox_mu))
+        elif algo == "scaffold":
+            self._jit = jax.jit(lambda p, b, cg, ci: scaffold_update(
+                pcfg_local, loss_fn, p,
+                jax.tree.map(lambda x: x[:pcfg.q_local], b), cg, ci))
+        else:
+            def _update(params, batches_3q):
+                batches = split_batches_for_option(option, batches_3q)
+                return client_update(pcfg_local, loss_fn, params, batches)
+            self._jit = jax.jit(_update)
+
+    def run(self, *, max_rounds: int, eval_every: int = 5,
+            eval_fn: Optional[Callable] = None,
+            record_active_every: float = 5.0) -> History:
+        hist = History()
+        n = len(self.clients)
+        now = 0.0
+        next_active_t = 0.0
+        for rnd in range(max_rounds):
+            sel = self.rng.choice(n, self.m, replace=False)
+            finish, deltas = [], []
+            c_updates = []
+            for i in sel:
+                b = sample_batches(self.clients[i], self.rng,
+                                   3 * self.pcfg.q_local, self.batch_size)
+                if self.algo == "scaffold":
+                    delta, c_new, _ = self._jit(self.params, b,
+                                                self.c_global,
+                                                self.c_clients[i])
+                    c_updates.append((i, c_new))
+                else:
+                    delta, _ = self._jit(self.params, b)
+                deltas.append(delta)
+                finish.append(self.delays.sample_download(int(i))
+                              + self.delays.sample_upload(int(i)))
+            round_len = max(finish)
+            # active-ratio grid: client i is busy until its own finish time
+            while next_active_t <= now + round_len:
+                rel = next_active_t - now
+                busy = sum(1 for f in finish if f > rel)
+                hist.active_times.append(next_active_t)
+                hist.active_ratio.append(busy / n)
+                next_active_t += record_active_every
+            now += round_len
+            mean_delta = jax.tree.map(
+                lambda *xs: sum(xs) / len(xs), *deltas)
+            self.params = jax.tree.map(
+                lambda w, d: (w.astype(jnp.float32)
+                              - self.pcfg.beta * d).astype(w.dtype),
+                self.params, mean_delta)
+            if self.algo == "scaffold":
+                for i, c_new in c_updates:
+                    old = self.c_clients[i]
+                    self.c_clients[i] = c_new
+                    self.c_global = jax.tree.map(
+                        lambda cg, cn, co: cg + (cn - co) / n,
+                        self.c_global, c_new, old)
+            if eval_fn is not None and (rnd + 1) % eval_every == 0:
+                hist.times.append(now)
+                hist.rounds.append(rnd + 1)
+                hist.acc.append(float(eval_fn(self.params)))
+        return hist

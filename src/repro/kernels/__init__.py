@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots (DESIGN.md §6).
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+dispatch wrapper) and ref.py (pure-jnp oracle); validated in interpret mode
+on CPU, targeted at TPU v5e.
+"""

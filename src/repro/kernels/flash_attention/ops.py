@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Dispatch: Pallas on TPU, interpret-mode Pallas for explicit kernel
+validation, jnp reference otherwise (CPU dry-runs lower the reference —
+kernels are a TPU-target artifact, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k", "mode"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, mode: str = "auto"):
+    """mode: "auto" (tpu->kernel else ref), "kernel" (interpret on CPU),
+    "ref" (pure jnp)."""
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    interpret = not _on_tpu()
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               softcap=softcap, block_q=block_q,
+                               block_k=block_k, interpret=interpret)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Plain materialized-logits attention with causal / sliding-window masking,
+GQA head grouping and optional logit softcap — the semantics the Pallas
+kernel must reproduce blockwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q: (B,S,Hq,hd); k,v: (B,T,Hkv,hd); Hq % Hkv == 0 -> (B,S,Hq,hd)."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, group, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    logits = logits * (hd ** -0.5)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (kj <= qi)
+    if window:
+        mask = mask & (kj > qi - window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, Hq, hd)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused local-update kernel.
+
+Option A step:   w ← w − η g
+Option C inner:  θ ← θ − η_in (g + λ(θ − w))
+Option C outer:  w ← w − η λ (w − θ)
+
+All three are memory-bound elementwise chains over multi-GB parameter
+tensors on the assigned architectures; the kernel fuses each into a single
+HBM round-trip (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sgd_step_ref(w, g, eta: float):
+    return (w.astype(jnp.float32) - eta * g.astype(jnp.float32)).astype(w.dtype)
+
+
+def prox_inner_ref(theta, g, w, eta_in: float, lam: float):
+    t32 = theta.astype(jnp.float32)
+    return (t32 - eta_in * (g.astype(jnp.float32)
+                            + lam * (t32 - w.astype(jnp.float32)))
+            ).astype(theta.dtype)
+
+
+def prox_outer_ref(w, theta, eta: float, lam: float):
+    w32 = w.astype(jnp.float32)
+    return (w32 - eta * lam * (w32 - theta.astype(jnp.float32))).astype(w.dtype)

@@ -1,0 +1,24 @@
+"""jit'd wrapper for the SSD kernel (pallas on TPU / interpret for
+validation / chunked-jnp reference otherwise)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_fwd
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "mode"))
+def ssd(x, dt, a_log, B_mat, C_mat, *, chunk: int = 128, mode: str = "auto"):
+    """mode: "auto" (tpu->kernel else sequential ref), "kernel" (interpret),
+    "ref" (sequential-recurrence oracle)."""
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ssd_ref(x, dt, a_log, B_mat, C_mat)
+    return ssd_fwd(x, dt, a_log, B_mat, C_mat, chunk=chunk,
+                   interpret=not _on_tpu())

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the SSD (Mamba2) kernel: sequential-recurrence
+semantics, the ground truth both the chunked reference and the Pallas
+kernel must match.
+
+y_t = C_t · h_t + 0 (D-skip handled by the caller),
+h_t = exp(dt_t A) h_{t-1} + dt_t B_t ⊗ x_t.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a_log, B_mat, C_mat):
+    """x: (B,S,H,P); dt: (B,S,H) post-softplus; a_log: (H,);
+    B_mat/C_mat: (B,S,G,N) -> y (B,S,H,P) in f32."""
+    Bb, S, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    x = x.astype(f32)
+    dt = dt.astype(f32)
+    Bm = jnp.repeat(B_mat.astype(f32), rep, axis=2)
+    Cm = jnp.repeat(C_mat.astype(f32), rep, axis=2)
+    A = -jnp.exp(a_log.astype(f32))
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                     # (B,H,P),(B,H),(B,H,N)×2
+        da = jnp.exp(dtt * A)                     # (B,H)
+        h = h * da[:, :, None, None] + jnp.einsum("bh,bhn,bhp->bhpn",
+                                                  dtt, bt, xt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, N), f32)
+    _, ys = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+                          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)                 # (B,S,H,P)

@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import (jax locks the device count on first
+#   init) — dry-run only; tests/benches see the real single device.
+
+"""Multi-pod dry-run: prove every (arch × input-shape × mesh) combination
+lowers, SPMD-partitions and compiles on the production meshes, and extract
+the roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+Writes one JSON per combination to experiments/dryrun/ (incremental;
+--force re-runs).
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, get_config, get_shape, list_archs
+from repro.core import PersAFLConfig
+from repro.launch import roofline as rl
+from repro.launch import specs, steps
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import rules
+from repro.sharding.ctx import activation_sharding
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               pcfg: PersAFLConfig, extra_tag: str = "",
+               sharding: str = "default", step: str = "pjit",
+               n_mb: int = 0, remat_policy: str = "full",
+               cache_sharding: str = "default") -> Dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if remat_policy != "full":
+        cfg = _dc.replace(cfg, remat_policy=remat_policy)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    record: Dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "kind": shape.kind,
+        "persafl": {"option": pcfg.option, "Q": pcfg.q_local,
+                    "inner_steps": pcfg.inner_steps,
+                    "maml_mode": pcfg.maml_mode,
+                    "delta_dtype": pcfg.delta_dtype},
+        "variant": {"sharding": sharding, "step": step, "n_mb": n_mb,
+                    "remat_policy": remat_policy,
+                    "cache_sharding": cache_sharding},
+        "tag": extra_tag,
+    }
+    if not cfg.supports(shape_name):
+        record["status"] = "skipped"
+        record["reason"] = "full-attention arch; long_500k skipped (DESIGN.md §4)"
+        return record
+
+    p_struct = specs.params_struct(cfg)
+    all_axes = mesh.axis_names
+    p_shard = rules.param_shardings(
+        cfg, p_struct, mesh,
+        model_parallel=sharding not in ("dp", "dp2d"),
+        mode="ep" if sharding == "ep" else "default")
+    batch_axes = all_axes if sharding == "dp2d" else None
+    t0 = time.time()
+    # Activation-sharding rules vs the variant:
+    #  * cohort: the cohort (data/pod) axes are Manual inside the shard_map
+    #    — strip them; the model axis stays Auto so TP rules still apply
+    #    (unless also dp, where everything is replicated).
+    #  * dp: must not pin activations to the model axis or SPMD re-shards
+    #    the weights back to tensor parallelism, overriding the replicated
+    #    input sharding.
+    if sharding in ("dp", "dp2d"):
+        act_rules = {}
+    elif step == "cohort":
+        d_ax = ("pod", "data") if multi_pod else ("data",)
+        act_rules = rules.strip_axes(rules.default_activation_rules(mesh),
+                                     d_ax)
+    else:
+        act_rules = rules.default_activation_rules(mesh)
+    with mesh:
+        with activation_sharding(act_rules):
+            if shape.kind == "train":
+                batch = specs.train_batch_specs(cfg, shape)
+                b_shard = rules.batch_shardings(batch, mesh, axes=batch_axes)
+                if step == "cohort":
+                    c_ax = all_axes if sharding == "dp2d" else None
+                    fn = steps.make_cohort_train_step(cfg, pcfg, mesh, n_mb,
+                                                      cohort_axes=c_ax)
+                else:
+                    fn = steps.make_train_step(cfg, pcfg, n_mb)
+                jitted = jax.jit(fn,
+                                 in_shardings=(p_shard, p_shard, b_shard),
+                                 out_shardings=None)
+                lowered = jitted.lower(p_struct, p_struct, batch)
+            elif shape.kind == "prefill":
+                batch = specs.prefill_batch_specs(cfg, shape)
+                b_shard = rules.batch_shardings(batch, mesh)
+                fn = steps.make_prefill_step(cfg)
+                jitted = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                                 out_shardings=None)
+                lowered = jitted.lower(p_struct, batch)
+            else:  # decode
+                cache, tok, pos = specs.decode_specs(cfg, shape, p_struct)
+                c_shard = rules.cache_shardings(
+                    cfg, cache, mesh,
+                    seq_on_model=(cache_sharding == "default"))
+                t_shard = rules.batch_shardings(tok, mesh)
+                r = rules.replicated(mesh)
+                fn = steps.make_serve_step(cfg)
+                jitted = jax.jit(fn,
+                                 in_shardings=(p_shard, c_shard, t_shard, r),
+                                 out_shardings=None)
+                lowered = jitted.lower(p_struct, cache, tok, pos)
+            record["lower_s"] = round(time.time() - t0, 1)
+            t0 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = round(time.time() - t0, 1)
+
+    ca = compiled.cost_analysis() or {}
+    record["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                               if isinstance(v, (int, float))}
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        record["memory_analysis"] = {
+            a: int(getattr(ma, a)) for a in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")
+            if hasattr(ma, a)}
+    hlo = compiled.as_text()
+    record["collective_bytes"] = rl.collective_bytes(hlo)
+    record["hlo_bytes_len"] = len(hlo)
+    # trip-count-aware re-analysis (XLA cost_analysis counts while bodies
+    # once — see launch/hlo_cost.py); preferred by roofline_terms
+    from repro.launch import hlo_cost
+    record["hlo_cost"] = hlo_cost.analyze(hlo)
+
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "decode":
+        tokens = shape.global_batch  # one token per request
+    n_ge = rl.grad_evals(pcfg.option, pcfg.q_local, pcfg.maml_mode,
+                         pcfg.inner_steps) if shape.kind == "train" else 1
+    record["model_flops"] = rl.model_flops(
+        cfg.n_active_params, tokens, kind=shape.kind, n_grad_evals=n_ge)
+    record["n_params"] = cfg.n_params
+    record["n_active_params"] = cfg.n_active_params
+    record["status"] = "ok"
+    record["roofline"] = rl.roofline_terms(record)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--option", default=None, help="override PersA-FL option")
+    ap.add_argument("--q", type=int, default=2,
+                    help="Q local steps for the lowered client round")
+    ap.add_argument("--inner-steps", type=int, default=2,
+                    help="ME inner prox steps (Option C)")
+    ap.add_argument("--tag", default="", help="variant tag for perf iterations")
+    ap.add_argument("--sharding", default="default",
+                    choices=["default", "dp", "dp2d", "ep"],
+                    help="dp = replicate params (pure cohort parallelism)")
+    ap.add_argument("--step", default="pjit", choices=["pjit", "cohort"],
+                    help="cohort = shard_map FedBuff round (delta pmean once)")
+    ap.add_argument("--mb", type=int, default=0,
+                    help="override train microbatch count")
+    ap.add_argument("--delta-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--remat-policy", default="full", choices=["full", "dots"])
+    ap.add_argument("--cache-sharding", default="default",
+                    choices=["default", "batch"])
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch == "all") else [args.arch]
+    shapes = ([s.name for s in INPUT_SHAPES]
+              if (args.all or args.shape == "all") else [args.shape])
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            for mp in meshes:
+                mesh_tag = "multi" if mp else "single"
+                suffix = f"_{args.tag}" if args.tag else ""
+                fname = os.path.join(
+                    args.out, f"{arch}_{shape}_{mesh_tag}{suffix}.json")
+                if os.path.exists(fname) and not args.force:
+                    print(f"[skip existing] {fname}")
+                    continue
+                option = args.option or cfg.persafl_option
+                pcfg = PersAFLConfig(option=option, q_local=args.q,
+                                     inner_steps=args.inner_steps,
+                                     maml_mode=cfg.maml_mode,
+                                     delta_dtype=args.delta_dtype)
+                print(f"=== {arch} × {shape} × {mesh_tag} (option {option}"
+                      f", {args.sharding}/{args.step}) ===", flush=True)
+                try:
+                    rec = dryrun_one(arch, shape, mp, pcfg, args.tag,
+                                     sharding=args.sharding, step=args.step,
+                                     n_mb=args.mb,
+                                     remat_policy=args.remat_policy,
+                                     cache_sharding=args.cache_sharding)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                with open(fname, "w") as f:
+                    json.dump(rec, f, indent=2)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" compute={r['compute_s']:.3e}s"
+                             f" memory={r['memory_s']:.3e}s"
+                             f" coll={r['collective_s']:.3e}s"
+                             f" lower={rec['lower_s']}s compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"--> {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

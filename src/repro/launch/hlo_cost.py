@@ -1,0 +1,272 @@
+"""Trip-count-aware cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every ``while`` body ONCE, which
+under-counts scan-over-layers / Q-local-steps / microbatch loops by their
+trip counts (verified empirically — see EXPERIMENTS.md §Dry-run notes).
+This module re-derives
+
+  * flops            — matmul (dot) flops, 2·|out|·contraction
+  * bytes            — operand+output bytes per top-level instruction
+                       (fusion internals excluded: a fusion is one HBM
+                       round-trip over its operands/outputs)
+  * collective bytes — per kind, output bytes of each collective
+
+by walking the computation call graph and multiplying by
+``known_trip_count`` from each while's backend_config.
+
+Conditionals sum all branches (zamba2's every-6th-layer shared-attention
+cond is therefore over-counted toward the safe side; noted per-record).
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"(bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|pred|c64|c128|"
+    r"f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)="
+    r"(\{[^}]*\}|%?[\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n":"(\d+)"')
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shapes(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        shape = [int(d) for d in dims.split(",")] if dims else []
+        out.append((dt, shape))
+    return out
+
+
+def _numel_bytes(text: str) -> int:
+    total = 0
+    for dt, shape in _shapes(text):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# elementwise float ops counted at 1 flop/output element (einsum patterns
+# that XLA lowers to multiply+reduce instead of dot — e.g. the SSD chunked
+# scan — are captured this way); reduce counted at input-numel flops.
+_ELEMENTWISE_FLOPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs",
+    "exponential-minus-one", "logistic", "cosine", "sine", "atan2",
+}
+
+# call-site plumbing with no HBM traffic of its own (bodies are walked
+# separately via the call graph)
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "iota", "broadcast",
+    "reshape",
+}
+
+
+class _Instr:
+    __slots__ = ("name", "out_text", "op", "operands", "attrs")
+
+    def __init__(self, name, out_text, op, operands, attrs):
+        self.name = name
+        self.out_text = out_text
+        self.op = op
+        self.operands = operands
+        self.attrs = attrs
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _parse_instr(line: str):
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.groups()
+    # rest = "<out-shapes> <op>(operands), attrs"
+    # find op: first "word(" at paren depth 0 after the shape segment
+    depth = 0
+    op_start = None
+    i = 0
+    while i < len(rest):
+        ch = rest[i]
+        if ch == "(":
+            # word before this paren?
+            j = i - 1
+            while j >= 0 and (rest[j].isalnum() or rest[j] in "-_"):
+                j -= 1
+            word = rest[j + 1:i]
+            if depth == 0 and word and word[0].isalpha():
+                op_start = (j + 1, i, word)
+                break
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        i += 1
+    if op_start is None:
+        return None
+    ws, istart, op = op_start
+    out_text = rest[:ws]
+    # operands segment: matching paren
+    depth = 0
+    j = istart
+    while j < len(rest):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    operands = re.findall(r"%([\w.\-]+)", rest[istart:j + 1])
+    attrs = rest[j + 1:]
+    return _Instr(name, out_text, op, operands, attrs)
+
+
+def parse_hlo(text: str) -> Dict[str, List[_Instr]]:
+    comps: Dict[str, List[_Instr]] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h and ("->" in line):
+            cur = h.group(2)
+            comps[cur] = []
+            if h.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            comps[cur].append(ins)
+    comps["__entry__"] = entry  # type: ignore[assignment]
+    return comps
+
+
+def analyze(text: str) -> Dict:
+    comps = parse_hlo(text)
+    entry = comps.pop("__entry__")
+    shape_of: Dict[Tuple[str, str], str] = {}
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            shape_of[(cname, ins.name)] = ins.out_text
+
+    fused = {c for c in comps if c.startswith("fused_") or ".fused" in c}
+
+    per_comp: Dict[str, Dict] = {}
+    edges: Dict[str, List[Tuple[str, int]]] = {}
+    for cname, instrs in comps.items():
+        flops = 0.0
+        bytes_ = 0.0
+        coll = {k: 0.0 for k in _COLLECTIVES}
+        edge_list: List[Tuple[str, int]] = []
+        inside_fusion = cname in fused
+        for ins in instrs:
+            op = ins.op
+            base = op.replace("-start", "").replace("-done", "")
+            if op == "dot":
+                shapes = _shapes(ins.out_text)
+                out_numel = 1
+                for _, s in shapes:
+                    for d in s:
+                        out_numel *= d
+                m = _LHS_CDIMS_RE.search(ins.attrs)
+                csize = 1
+                if m and ins.operands:
+                    lhs = shape_of.get((cname, ins.operands[0]), "")
+                    ls = _shapes(lhs)
+                    if ls:
+                        dims = [int(x) for x in m.group(1).split(",") if x]
+                        for d in dims:
+                            if d < len(ls[0][1]):
+                                csize *= ls[0][1][d]
+                flops += 2.0 * out_numel * csize
+            elif op in _ELEMENTWISE_FLOPS:
+                shapes = _shapes(ins.out_text)
+                n = 1
+                for _, s in shapes:
+                    for d in s:
+                        n *= d
+                # only count float outputs
+                if shapes and shapes[0][0] in ("f32", "bf16", "f16", "f64"):
+                    flops += float(n)
+            elif op == "reduce" and ins.operands:
+                inp = shape_of.get((cname, ins.operands[0]), "")
+                sh = _shapes(inp)
+                if sh and sh[0][0] in ("f32", "bf16", "f16", "f64"):
+                    n = 1
+                    for d in sh[0][1]:
+                        n *= d
+                    flops += float(n)
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                coll[base] += _numel_bytes(ins.out_text)
+            # call edges
+            trip = 1
+            tm = _TRIP_RE.search(ins.attrs)
+            if tm:
+                trip = int(tm.group(1))
+            for am in _CALL_ATTR_RE.finditer(ins.attrs):
+                kind = am.group(0).split("=", 1)[0]
+                target = am.group(1)
+                names = re.findall(r"%?([\w.\-]+)", target)
+                for nm in names:
+                    if nm in comps:
+                        mult = trip if kind == "body" else 1
+                        edge_list.append((nm, mult))
+            # HBM bytes: skip inside fusions, params/constants/plumbing
+            if not inside_fusion and op not in _NO_TRAFFIC:
+                if op == "dynamic-update-slice":
+                    # aliased in-place by XLA: traffic = read+write the
+                    # update region, not the whole buffer
+                    upd = (shape_of.get((cname, ins.operands[1]), "")
+                           if len(ins.operands) > 1 else "")
+                    b = 2 * _numel_bytes(upd)
+                elif op == "dynamic-slice":
+                    b = 2 * _numel_bytes(ins.out_text)
+                else:
+                    b = _numel_bytes(ins.out_text)
+                    for opr in ins.operands:
+                        b += _numel_bytes(shape_of.get((cname, opr), ""))
+                bytes_ += b
+        per_comp[cname] = {"flops": flops, "bytes": bytes_, "coll": coll}
+        edges[cname] = edge_list
+
+    totals = {"flops": 0.0, "bytes": 0.0,
+              "coll": {k: 0.0 for k in _COLLECTIVES}}
+
+    def dfs(cname: str, mult: float, depth: int = 0):
+        if depth > 50 or cname not in per_comp:
+            return
+        pc = per_comp[cname]
+        totals["flops"] += pc["flops"] * mult
+        totals["bytes"] += pc["bytes"] * mult
+        for k in _COLLECTIVES:
+            totals["coll"][k] += pc["coll"][k] * mult
+        for callee, emult in edges.get(cname, []):
+            dfs(callee, mult * emult, depth + 1)
+
+    if entry:
+        dfs(entry, 1.0)
+    return {"flops": totals["flops"], "bytes": totals["bytes"],
+            "collective_bytes": {k: int(v) for k, v in totals["coll"].items()}}

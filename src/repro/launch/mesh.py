@@ -1,0 +1,22 @@
+"""Production mesh construction (TPU v5e target).
+
+Defined as a FUNCTION so importing this module never touches jax device
+state.  Single pod: (16, 16) = 256 chips, axes ("data","model"); two pods:
+(2, 16, 16) = 512 chips, axes ("pod","data","model") — the "pod" axis is
+the slow-ICI/DCN dimension, carrying only client-cohort (data) parallelism
+so no tensor-parallel collective ever crosses it (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1×1 mesh over the local device (CPU smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

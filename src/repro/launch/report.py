@@ -1,0 +1,107 @@
+"""Render the §Dry-run / §Roofline tables in EXPERIMENTS.md from the
+dry-run JSONs.
+
+  PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_records(dirname: str, tag: str = "") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if (r.get("tag") or "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def _fmt_s(x: float) -> str:
+    return f"{x:.3g}"
+
+
+def roofline_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | status | compute (s) | memory (s) | "
+            "collective (s) | dominant | MODEL/HLO | note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs = [r for r in recs if r.get("mesh") == mesh or
+            (mesh == "16x16" and r.get("mesh") == "single")]
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped | — | — | — "
+                        f"| — | — | {r.get('reason','')} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | — | — | — "
+                        f"| — | — | {r.get('error','')[:60]} |")
+            continue
+        rf = r["roofline"]
+        note = ""
+        if r["arch"].startswith("zamba2"):
+            note = "cond branches both counted (shared-attn overcount)"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {_fmt_s(rf['compute_s'])} "
+            f"| {_fmt_s(rf['memory_s'])} | {_fmt_s(rf['collective_s'])} "
+            f"| {rf['dominant']} | {rf['useful_ratio']:.2f} | {note} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | status | args GB/dev | temp GB/dev | "
+            "compile s | collectives (GB/dev: AR/AG/RS/A2A/CP) |",
+            "|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs = sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                                       r.get("mesh", "")))
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','')} | "
+                        f"{r['status']} | — | — | — | — |")
+            continue
+        ma = r.get("memory_analysis", {})
+        gb = 1024 ** 3
+        args = ma.get("argument_size_in_bytes", 0) / gb
+        temp = ma.get("temp_size_in_bytes", 0) / gb
+        cb = r.get("hlo_cost", {}).get("collective_bytes",
+                                       r.get("collective_bytes", {}))
+        coll = "/".join(f"{cb.get(k,0)/gb:.2f}" for k in
+                        ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {args:.2f} | "
+            f"{temp:.2f} | {r.get('compile_s','')} | {coll} |")
+    return "\n".join(rows)
+
+
+def summary(recs: List[Dict]) -> str:
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    sk = sum(1 for r in recs if r["status"] == "skipped")
+    er = len(recs) - ok - sk
+    return f"{len(recs)} combinations: {ok} ok, {sk} skipped, {er} errors"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    recs = load_records(args.dir, args.tag)
+    print("## Summary\n")
+    print(summary(recs))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(recs, "16x16"))
+    print("\n## Dry-run detail\n")
+    print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

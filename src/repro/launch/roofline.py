@@ -1,0 +1,116 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Terms (per (arch × shape × mesh), seconds):
+  compute    = HLO_FLOPs / (chips × 197e12)        [bf16 peak per chip]
+  memory     = HLO_bytes / (chips × 819e9)          [HBM BW per chip]
+  collective = per_device_collective_bytes / 50e9   [~link BW per chip]
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are parsed from the post-SPMD compiled HLO text (per-device shapes),
+summing the output bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute; per-device bytes divided by link BW equals
+the global-bytes/(chips×link) form of the assignment formula.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per gradient evaluation,
+scaled by the PersA-FL option's gradient-evaluation count (Q local steps ×
+{A:1, B(full/hf):4, B(fo):2, C:K+1}); decode/prefill use the 2·N·D forward
+form.  The MODEL/HLO ratio flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|"
+                       r"pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device output bytes per collective kind, from compiled HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        shape_part, op = m.groups()
+        op = op.replace("-start", "").replace("-done", "")
+        if op in _COLLECTIVES:
+            if op.endswith("-done"):
+                continue
+            out[op] += _shape_bytes(shape_part)
+    return out
+
+
+def grad_evals(option: str, q: int, maml_mode: str, inner_steps: int) -> int:
+    per_step = {"A": 1, "C": inner_steps + 1}.get(option)
+    if per_step is None:  # B
+        per_step = 2 if maml_mode == "fo" else 4
+    return q * per_step
+
+
+def model_flops(n_active_params: int, tokens: int, *, kind: str,
+                n_grad_evals: int = 1) -> float:
+    if kind == "train":
+        return 6.0 * n_active_params * tokens * n_grad_evals
+    return 2.0 * n_active_params * tokens
+
+
+def roofline_terms(record: Dict) -> Dict:
+    """record: one dry-run JSON (see dryrun.py). Returns the three terms,
+    dominant bottleneck and usefulness ratio.
+
+    Prefers the trip-count-aware ``hlo_cost`` re-analysis when present
+    (XLA's cost_analysis counts while/scan bodies once — under-counts
+    scan-over-layers by ~L×Q×mb); falls back to raw cost_analysis."""
+    chips = record["n_devices"]
+    if "hlo_cost" in record:
+        flops = record["hlo_cost"]["flops"]
+        bytes_acc = record["hlo_cost"]["bytes"]
+        coll = sum(record["hlo_cost"]["collective_bytes"].values())
+    else:
+        flops = record["cost_analysis"].get("flops", 0.0)
+        bytes_acc = record["cost_analysis"].get("bytes accessed", 0.0)
+        coll = sum(record["collective_bytes"].values())
+    # the compiled module is post-SPMD: shapes (hence flops/bytes/collective
+    # bytes) are PER-DEVICE, so global = per_device × chips and
+    # global/(chips × per-chip-rate) == per_device / per-chip-rate.
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = record.get("model_flops", 0.0)
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops": flops,
+        "useful_ratio": (mf / (flops * chips)) if flops else 0.0,
+        "collective_by_kind": record["collective_bytes"],
+    }

@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct input specs for every (arch × input-shape) pair.
+
+Stand-ins are weak-type-correct and shardable; nothing is allocated.  The
+modality carve-outs live here: VLM shapes reserve ``n_visual_tokens``
+positions for stubbed patch embeddings; audio shapes carry stubbed frame
+embeddings of the fixed encoder length (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import api
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    act = cfg.activation_dtype
+    batch: Dict = {}
+    if cfg.n_visual_tokens:
+        text = S - cfg.n_visual_tokens
+        batch["tokens"] = _sds((B, text), jnp.int32)
+        batch["labels"] = _sds((B, text), jnp.int32)
+        batch["visual"] = _sds((B, cfg.n_visual_tokens, cfg.d_model), act)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        batch["labels"] = _sds((B, S), jnp.int32)
+    if cfg.is_encdec:
+        batch["frames"] = _sds((B, cfg.enc_len, cfg.d_model), act)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: InputShape) -> Dict:
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape, params_struct):
+    """-> (cache_struct, tokens_struct, pos_struct)."""
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, 1), jnp.int32)}
+    if cfg.is_encdec:
+        batch["frames"] = _sds((B, cfg.enc_len, cfg.d_model),
+                               cfg.activation_dtype)
+    cache = jax.eval_shape(
+        lambda p, b: api.init_cache(cfg, p, b, S, cfg.activation_dtype),
+        params_struct, batch)
+    return cache, _sds((B, 1), jnp.int32), _sds((), jnp.int32)
+
+
+def params_struct(cfg: ArchConfig, cast: bool = True):
+    """Abstract parameter tree; ≥2-D leaves stored in cfg.dtype (bf16 in
+    production), 1-D norm/scale vectors kept f32."""
+    struct = jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+    if not cast:
+        return struct
+    act = cfg.activation_dtype
+
+    def recast(leaf):
+        if leaf.ndim >= 2:
+            return jax.ShapeDtypeStruct(leaf.shape, act)
+        return leaf
+
+    return jax.tree.map(recast, struct)
+
+
+def cast_params(cfg: ArchConfig, params):
+    """Concrete counterpart of params_struct's dtype policy."""
+    act = cfg.activation_dtype
+
+    def recast(leaf):
+        return leaf.astype(act) if leaf.ndim >= 2 else leaf
+
+    return jax.tree.map(recast, params)

@@ -1,0 +1,163 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Assignment carve-out: the mel-spectrogram + conv feature extractor is a
+STUB — the model consumes precomputed frame embeddings (B, enc_len, d).
+Positions are sinusoidal (whisper uses sinusoidal enc / learned dec; we use
+sinusoidal for both — noted deviation, parameter-free and length-agnostic).
+MLPs are 2-matrix GELU (faithful to whisper's param count).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import (cross_entropy, embed_tokens, init_embed,
+                                 init_mlp_gelu, init_rms_norm,
+                                 mlp_gelu_forward, rms_norm,
+                                 sinusoidal_positions, unembed)
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_encdec(cfg: ArchConfig, key) -> Dict:
+    ks = jax.random.split(key, 5)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": init_rms_norm(cfg.d_model),
+                "attn": attn.init_attn(k1, cfg),
+                "ln2": init_rms_norm(cfg.d_model),
+                "mlp": init_mlp_gelu(k2, cfg.d_model, cfg.d_ff)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": init_rms_norm(cfg.d_model),
+                "self": attn.init_attn(k1, cfg),
+                "ln_x": init_rms_norm(cfg.d_model),
+                "cross": attn.init_attn(k2, cfg),
+                "ln2": init_rms_norm(cfg.d_model),
+                "mlp": init_mlp_gelu(k3, cfg.d_model, cfg.d_ff)}
+
+    return {
+        "embed": init_embed(ks[0], cfg.vocab, cfg.d_model),
+        "enc_layers": _stack([enc_layer(k)
+                              for k in jax.random.split(ks[1], cfg.enc_layers)]),
+        "enc_norm": init_rms_norm(cfg.d_model),
+        "dec_layers": _stack([dec_layer(k)
+                              for k in jax.random.split(ks[2], cfg.n_layers)]),
+        "final_norm": init_rms_norm(cfg.d_model),
+    }
+
+
+def encode(cfg: ArchConfig, params, frames) -> jnp.ndarray:
+    """frames: (B, enc_len, d) stubbed frontend embeddings -> (B, enc_len, d)."""
+    dt = cfg.activation_dtype
+    h = frames.astype(dt)
+    h = h + sinusoidal_positions(h.shape[1], cfg.d_model).astype(dt)[None]
+
+    def body(h, lp):
+        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        a, _ = attn.attn_forward(cfg, lp["attn"], x, positions=None,
+                                 causal=False)
+        h = h + a
+        x = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        return h + mlp_gelu_forward(lp["mlp"], x), None
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(scan_body, h, params["enc_layers"])
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_full(cfg: ArchConfig, params, tokens, enc_h) -> jnp.ndarray:
+    """Teacher-forced decoder (training). tokens: (B,S) -> hidden (B,S,d)."""
+    dt = cfg.activation_dtype
+    h = embed_tokens(params["embed"], tokens, dt)
+    h = h + sinusoidal_positions(h.shape[1], cfg.d_model).astype(dt)[None]
+
+    def body(h, lp):
+        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        a, _ = attn.attn_forward(cfg, lp["self"], x, positions=None,
+                                 causal=True)
+        h = h + a
+        x = rms_norm(h, lp["ln_x"], cfg.norm_eps)
+        a, _ = attn.attn_forward(cfg, lp["cross"], x, positions=None,
+                                 kv_x=enc_h, causal=False)
+        h = h + a
+        x = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        return h + mlp_gelu_forward(lp["mlp"], x), None
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(scan_body, h, params["dec_layers"])
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def encdec_loss(cfg: ArchConfig, params, batch: Dict) -> jnp.ndarray:
+    """batch: frames (B,enc_len,d), tokens (B,S), labels (B,S)."""
+    enc_h = encode(cfg, params, batch["frames"])
+    h = decode_full(cfg, params, batch["tokens"], enc_h)
+    logits = unembed(params["embed"], h, cfg.final_softcap)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    return cross_entropy(logits, jnp.maximum(labels, 0), mask)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_encdec_cache(cfg: ArchConfig, params, frames, max_len: int, dtype):
+    """Encode once; precompute per-layer cross K/V; empty self caches."""
+    enc_h = encode(cfg, params, frames)
+    B = frames.shape[0]
+    hd = cfg.resolved_head_dim
+
+    def cross_kv(lp):
+        dt = enc_h.dtype
+        k = (enc_h @ lp["cross"]["wk"].astype(dt))
+        v = (enc_h @ lp["cross"]["wv"].astype(dt))
+        if "bk" in lp["cross"]:
+            k = k + lp["cross"]["bk"].astype(dt)
+            v = v + lp["cross"]["bv"].astype(dt)
+        T = enc_h.shape[1]
+        return (k.reshape(B, T, cfg.n_kv_heads, hd).astype(dtype),
+                v.reshape(B, T, cfg.n_kv_heads, hd).astype(dtype))
+
+    ck, cv = jax.vmap(cross_kv)(params["dec_layers"])
+    return {
+        "self_k": jnp.zeros((cfg.n_layers, B, max_len, cfg.n_kv_heads, hd),
+                            dtype),
+        "self_v": jnp.zeros((cfg.n_layers, B, max_len, cfg.n_kv_heads, hd),
+                            dtype),
+        "cross_k": ck, "cross_v": cv,
+    }
+
+
+def encdec_decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    """tokens (B,1), pos scalar -> (logits, new cache)."""
+    dt = cfg.activation_dtype
+    h = embed_tokens(params["embed"], tokens, dt)
+    h = h + sinusoidal_positions(1, cfg.d_model, offset=pos).astype(dt)[None]
+
+    def body(h, xs):
+        lp, sk, sv, ck, cv = xs
+        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        a, sk, sv = attn.attn_decode(cfg, lp["self"], x, sk, sv, pos,
+                                     rope=False)
+        h = h + a
+        x = rms_norm(h, lp["ln_x"], cfg.norm_eps)
+        h = h + attn.cross_attn_decode(cfg, lp["cross"], x, ck, cv)
+        x = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        return h + mlp_gelu_forward(lp["mlp"], x), (sk, sv)
+
+    h, (sk, sv) = jax.lax.scan(
+        body, h, (params["dec_layers"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    new_cache = dict(cache, self_k=sk, self_v=sv)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return unembed(params["embed"], h, cfg.final_softcap), new_cache

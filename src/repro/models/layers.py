@@ -1,0 +1,139 @@
+"""Shared model building blocks: norms, MLPs, rotary embeddings, init.
+
+All models are pure-functional: parameters are nested dicts of jnp arrays,
+built by ``init_*`` functions and consumed by forward functions.  Stacked
+(scan-over-layers) parameters carry a leading ``n_layers`` axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import shard_activation
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Truncated-normal (fan-in) init, stored in f32 and cast at use."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    """RMSNorm in f32 (bf16-safe), cast back to input dtype."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def init_rms_norm(d: int):
+    # gemma-style (1 + gamma) parameterization; init gamma = 0.
+    return jnp.zeros((d,), jnp.float32)
+
+
+def softcap(logits, cap: float):
+    """Logit soft-capping (gemma2): cap * tanh(x / cap)."""
+    if not cap:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, d_in: Optional[int] = None):
+    d_in = d_in or d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(k1, (d_in, d_ff)),
+        "wu": dense_init(k2, (d_in, d_ff)),
+        "wd": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def mlp_forward(p, x):
+    dt = x.dtype
+    h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wu"].astype(dt))
+    h = shard_activation(h, "ffn")
+    return h @ p["wd"].astype(dt)
+
+
+def init_mlp_gelu(key, d_model: int, d_ff: int):
+    """2-matrix GELU MLP (whisper-style) — keeps the param count faithful."""
+    k1, k2 = jax.random.split(key)
+    return {"w1": dense_init(k1, (d_model, d_ff)),
+            "w2": dense_init(k2, (d_ff, d_model))}
+
+
+def mlp_gelu_forward(p, x):
+    dt = x.dtype
+    h = jax.nn.gelu(x @ p["w1"].astype(dt))
+    h = shard_activation(h, "ffn")
+    return h @ p["w2"].astype(dt)
+
+
+def sinusoidal_positions(n: int, d: int, offset=0):
+    """(n, d) sinusoidal position embeddings (whisper enc/dec)."""
+    pos = (jnp.arange(n) + offset)[:, None].astype(jnp.float32)
+    div = 1.0 / (10_000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos * div[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "tok": dense_init(k1, (vocab, d_model), scale=1.0),
+        "unembed": dense_init(k2, (d_model, vocab)),
+    }
+
+
+def embed_tokens(p, tokens, dtype):
+    return p["tok"].astype(dtype)[tokens]
+
+
+def unembed(p, h, final_softcap: float = 0.0):
+    logits = h.astype(jnp.float32) @ p["unembed"].astype(jnp.float32)
+    return softcap(logits, final_softcap)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token-mean CE in f32. labels: int32; mask: 0/1 same shape."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,303 @@
+"""Decoder-only LM covering the dense / moe / vlm families.
+
+Features (per-arch flags in :class:`ArchConfig`):
+  * GQA with optional QKV bias (qwen), logit softcaps + post-block norms +
+    local/global alternation (gemma2), MLA (deepseek-v3).
+  * Dense SwiGLU FFN or MoE (shared + routed experts, first-k-dense).
+  * VLM: stubbed visual patch embeddings prepended to the text stream
+    (assignment carve-out; the ViT is NOT implemented).
+  * DeepSeek MTP: one extra transformer block predicting token t+2,
+    sharing the unembedding (train-time only, weight 0.1).
+
+Scan-over-layers with per-layer remat keeps the lowered HLO to one stacked
+layer regardless of depth; heterogeneous layers (gemma2 local/global) are
+handled with a scanned boolean, deepseek's first-k dense layers as an
+unrolled prefix.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import (cross_entropy, dense_init, embed_tokens,
+                                 init_embed, init_mlp, init_rms_norm,
+                                 mlp_forward, rms_norm, unembed)
+from repro.sharding.ctx import shard_activation
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ArchConfig, *, dense_ffn_width: int = 0):
+    """One transformer layer; dense_ffn_width overrides MoE (deepseek prefix)."""
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": init_rms_norm(cfg.d_model), "ln2": init_rms_norm(cfg.d_model)}
+    if cfg.mla is not None:
+        p["attn"] = attn.init_mla(k1, cfg)
+    else:
+        p["attn"] = attn.init_attn(k1, cfg)
+    if dense_ffn_width:
+        p["mlp"] = init_mlp(k2, cfg.d_model, dense_ffn_width)
+    elif cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff)
+    if cfg.post_block_norm:
+        p["ln1_post"] = init_rms_norm(cfg.d_model)
+        p["ln2_post"] = init_rms_norm(cfg.d_model)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def n_scanned_layers(cfg: ArchConfig) -> int:
+    k = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    return cfg.n_layers - k
+
+
+def init_lm(cfg: ArchConfig, key) -> Dict:
+    ks = jax.random.split(key, 5)
+    params: Dict = {"embed": init_embed(ks[0], cfg.vocab, cfg.d_model),
+                    "final_norm": init_rms_norm(cfg.d_model)}
+    first_k = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    if first_k:
+        dkeys = jax.random.split(ks[1], first_k)
+        params["dense_prefix"] = [
+            _init_layer(k, cfg, dense_ffn_width=cfg.moe.dense_d_ff)
+            for k in dkeys]
+    n_scan = n_scanned_layers(cfg)
+    lkeys = jax.random.split(ks[2], n_scan)
+    params["layers"] = _stack([_init_layer(k, cfg) for k in lkeys])
+    if cfg.n_visual_tokens:
+        params["vis_proj"] = dense_init(ks[3], (cfg.d_model, cfg.d_model))
+    if cfg.use_mtp:
+        k1, k2 = jax.random.split(ks[4])
+        params["mtp"] = {
+            "proj": dense_init(k1, (2 * cfg.d_model, cfg.d_model)),
+            "block": _init_layer(k2, cfg, dense_ffn_width=cfg.d_ff or 2048),
+            "norm": init_rms_norm(cfg.d_model),
+        }
+    return params
+
+
+def _is_local_flags(cfg: ArchConfig, n: int, offset: int = 0):
+    idx = jnp.arange(offset, offset + n)
+    if cfg.local_global_period:
+        return (idx % cfg.local_global_period) == 0
+    if cfg.sliding_window:
+        return jnp.ones((n,), bool)
+    return jnp.zeros((n,), bool)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_forward(cfg: ArchConfig, p, h, positions, is_local):
+    dt = h.dtype
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, _ = attn.mla_forward(cfg, p["attn"], x, positions=positions)
+    else:
+        a, _ = attn.attn_forward(cfg, p["attn"], x, positions=positions,
+                                 window=cfg.sliding_window,
+                                 local_flag=is_local)
+    if cfg.post_block_norm:
+        a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
+    h = h + a
+    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        f, aux = moe_mod.moe_forward(cfg, p["moe"], x)
+    else:
+        f = mlp_forward(p["mlp"], x)
+    if cfg.post_block_norm:
+        f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
+    h = h + f
+    h = shard_activation(h, "residual")
+    return h.astype(dt), aux
+
+
+def lm_hidden(cfg: ArchConfig, params, tokens, visual: Optional[jnp.ndarray]
+              = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B,S_text) int32 [; visual: (B,V,d)] -> (h (B,S,d), aux)."""
+    dt = cfg.activation_dtype
+    h = embed_tokens(params["embed"], tokens, dt)
+    if cfg.post_block_norm:  # gemma-style embedding scale
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.n_visual_tokens:
+        assert visual is not None, "vlm arch needs visual embeddings"
+        vis = visual.astype(dt) @ params["vis_proj"].astype(dt)
+        h = jnp.concatenate([vis, h], axis=1)
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    offset = 0
+    for p in params.get("dense_prefix", []):
+        fwd = jax.checkpoint(lambda pp, hh: _layer_forward(
+            cfg, pp, hh, positions, jnp.asarray(False))) if cfg.remat else \
+            (lambda pp, hh: _layer_forward(cfg, pp, hh, positions,
+                                           jnp.asarray(False)))
+        h, aux = fwd(p, h)
+        aux_total = aux_total + aux
+        offset += 1
+
+    n_scan = n_scanned_layers(cfg)
+    flags = _is_local_flags(cfg, n_scan, offset)
+
+    def body(carry, xs):
+        hh, auxc = carry
+        lp, flag = xs
+        hh, aux = _layer_forward(cfg, lp, hh, positions, flag)
+        return (hh, auxc + aux), None
+
+    if cfg.remat and cfg.remat_policy == "dots":
+        scan_body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif cfg.remat:
+        scan_body = jax.checkpoint(body)
+    else:
+        scan_body = body
+    (h, aux_total), _ = jax.lax.scan(scan_body, (h, aux_total),
+                                     (params["layers"], flags))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux_total
+
+
+def lm_logits(cfg: ArchConfig, params, tokens, visual=None):
+    h, aux = lm_hidden(cfg, params, tokens, visual)
+    return unembed(params["embed"], h, cfg.final_softcap), aux
+
+
+def lm_loss(cfg: ArchConfig, params, batch: Dict) -> jnp.ndarray:
+    """batch: tokens (B,S), labels (B,S) [, visual (B,V,d)].
+
+    For VLM archs the visual positions get label -1 (masked).
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    h, aux = lm_hidden(cfg, params, tokens, batch.get("visual"))
+    if cfg.n_visual_tokens:
+        h_text = h[:, cfg.n_visual_tokens:, :]
+    else:
+        h_text = h
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    # chunked unembed keeps the (B,S,V) logits out of HBM all at once
+    logits = unembed(params["embed"], h_text, cfg.final_softcap)
+    loss = cross_entropy(logits, labels, mask)
+    if cfg.use_mtp and "mtp" in params:
+        loss = loss + 0.1 * _mtp_loss(cfg, params, h_text, tokens, labels, mask)
+    return loss + aux
+
+
+def _mtp_loss(cfg: ArchConfig, params, h, tokens, labels, mask):
+    """DeepSeek-V3 multi-token prediction: predict token t+2 from
+    concat(h_t, embed(token_{t+1})) through one extra block."""
+    mp = params["mtp"]
+    dt = h.dtype
+    B, S = tokens.shape
+    # next-token embeddings, shifted left by one
+    nxt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+    e = embed_tokens(params["embed"], nxt, dt)
+    hcat = jnp.concatenate([h, e], axis=-1) @ mp["proj"].astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    hm, _ = _layer_forward(cfg, mp["block"], hcat, positions,
+                           jnp.asarray(False))
+    hm = rms_norm(hm, mp["norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], hm, cfg.final_softcap)
+    # target: token t+2  -> labels shifted left by one
+    lab2 = jnp.concatenate([labels[:, 1:], -jnp.ones((B, 1), labels.dtype)],
+                           axis=1)
+    m2 = mask * (lab2 >= 0).astype(jnp.float32)
+    return cross_entropy(logits, jnp.maximum(lab2, 0), m2)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_lm_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    """Stacked per-layer KV caches (scanned-layer portion + dense prefix)."""
+    n_scan = n_scanned_layers(cfg)
+    first_k = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    if cfg.mla is not None:
+        m = cfg.mla
+        def one(n):
+            return {"ckv": jnp.zeros((n, batch, max_len, m.kv_lora_rank), dtype),
+                    "krope": jnp.zeros((n, batch, max_len, m.qk_rope_head_dim),
+                                       dtype)}
+    else:
+        hd = cfg.resolved_head_dim
+        def one(n):
+            return {"k": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dtype),
+                    "v": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dtype)}
+    cache = {"layers": one(n_scan)}
+    if first_k:
+        cache["dense_prefix"] = one(first_k)
+    return cache
+
+
+def _layer_decode(cfg: ArchConfig, p, h, lcache, pos, is_local):
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, ckv, krope = attn.mla_decode(cfg, p["attn"], x, lcache["ckv"],
+                                        lcache["krope"], pos)
+        new_cache = {"ckv": ckv, "krope": krope}
+    else:
+        a, k, v = attn.attn_decode(cfg, p["attn"], x, lcache["k"], lcache["v"],
+                                   pos, window=cfg.sliding_window,
+                                   local_flag=is_local)
+        new_cache = {"k": k, "v": v}
+    if cfg.post_block_norm:
+        a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
+    h = h + a
+    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        f, _ = moe_mod.moe_forward(cfg, p["moe"], x)
+    else:
+        f = mlp_forward(p["mlp"], x)
+    if cfg.post_block_norm:
+        f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
+    return h + f, new_cache
+
+
+def lm_decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    """tokens: (B,1) int32; pos: scalar int32 -> (logits (B,1,V), cache)."""
+    dt = cfg.activation_dtype
+    h = embed_tokens(params["embed"], tokens, dt)
+    if cfg.post_block_norm:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt)
+
+    new_cache = {}
+    if "dense_prefix" in params:
+        upd = []
+        for i, p in enumerate(params["dense_prefix"]):
+            lcache = jax.tree.map(lambda c: c[i], cache["dense_prefix"])
+            h, nc = _layer_decode(cfg, p, h, lcache, pos, jnp.asarray(False))
+            upd.append(nc)
+        new_cache["dense_prefix"] = _stack(upd)
+
+    n_scan = n_scanned_layers(cfg)
+    offset = len(params.get("dense_prefix", []))
+    flags = _is_local_flags(cfg, n_scan, offset)
+
+    def body(h, xs):
+        lp, lcache, flag = xs
+        h, nc = _layer_decode(cfg, lp, h, lcache, pos, flag)
+        return h, nc
+
+    h, scanned_cache = jax.lax.scan(body, h,
+                                    (params["layers"], cache["layers"], flags))
+    new_cache["layers"] = scanned_cache
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg.final_softcap)
+    return logits, new_cache

@@ -1,0 +1,104 @@
+"""Mixture-of-Experts layer: top-k router, grouped capacity dispatch,
+optional shared experts (DeepSeek-V3) and router load-balance aux loss.
+
+TPU-native expert parallelism: experts live on the ``model`` mesh axis,
+tokens on ``data``.  Dispatch is the GShard-style grouped one-hot einsum —
+tokens are grouped per sequence so capacity is per (group, expert) and the
+dispatch tensor stays small; the (group <-> expert) einsum is exactly the
+transpose XLA SPMD lowers to an all-to-all (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import dense_init
+from repro.sharding.ctx import shard_activation
+
+
+def init_moe(key, cfg: ArchConfig):
+    mo: MoEConfig = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, mo.n_experts), scale=0.02),
+        # stacked expert weights: (E, d, f) / (E, f, d)
+        "wg": dense_init(ks[1], (mo.n_experts, d, mo.expert_d_ff)),
+        "wu": dense_init(ks[2], (mo.n_experts, d, mo.expert_d_ff)),
+        "wd": dense_init(ks[3], (mo.n_experts, mo.expert_d_ff, d)),
+    }
+    if mo.n_shared_experts:
+        kk = jax.random.split(ks[4], 3)
+        f = mo.shared_d_ff * mo.n_shared_experts
+        p["shared"] = {
+            "wg": dense_init(kk[0], (d, f)),
+            "wu": dense_init(kk[1], (d, f)),
+            "wd": dense_init(kk[2], (f, d)),
+        }
+    return p
+
+
+def expert_capacity(tokens_per_group: int, mo: MoEConfig) -> int:
+    c = math.ceil(tokens_per_group * mo.top_k / mo.n_experts * mo.capacity_factor)
+    return max(int(c), mo.top_k)
+
+
+def moe_forward(cfg: ArchConfig, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Groups = batch rows (one sequence per group).  Tokens over capacity are
+    dropped (standard GShard semantics, capacity_factor 1.25).
+    """
+    mo: MoEConfig = cfg.moe
+    dt = x.dtype
+    G, S, d = x.shape
+    E, K = mo.n_experts, mo.top_k
+    C = expert_capacity(S, mo)
+
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)   # (G,S,E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(gates, K)                      # (G,S,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- capacity assignment -------------------------------------------------
+    # one-hot over experts per (token, k-slot); earlier tokens get priority.
+    oh = jax.nn.one_hot(top_i, E, dtype=jnp.float32)            # (G,S,K,E)
+    # queue position of each (token,slot) within its expert
+    flat = oh.reshape(G, S * K, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, S, K, E)
+    p_sel = jnp.einsum("gske,gske->gsk", pos, oh).astype(jnp.int32)
+    # one_hot(index >= C) is all-zero -> over-capacity tokens drop out here
+    oh_c = jax.nn.one_hot(p_sel, C, dtype=jnp.float32)          # (G,S,K,C)
+    # dispatch: (G,S,E,C) in {0,1}; combine additionally carries router weights
+    dispatch = jnp.einsum("gske,gskc->gsec", oh, oh_c)
+    combine = jnp.einsum("gsk,gske,gskc->gsec", top_w, oh, oh_c)
+
+    dispatch = dispatch.astype(dt)
+    combine = combine.astype(dt)
+    dispatch = shard_activation(dispatch, "moe_dispatch")
+
+    # --- expert compute (expert-parallel) ------------------------------------
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch, x)             # all-to-all
+    xin = shard_activation(xin, "moe_expert_in")
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, p["wg"].astype(dt)))
+    h = h * jnp.einsum("egcd,edf->egcf", xin, p["wu"].astype(dt))
+    out_e = jnp.einsum("egcf,efd->egcd", h, p["wd"].astype(dt))
+    out = jnp.einsum("gsec,egcd->gsd", combine, out_e)          # all-to-all back
+
+    # --- shared experts -------------------------------------------------------
+    if "shared" in p:
+        sh = p["shared"]
+        hs = jax.nn.silu(x @ sh["wg"].astype(dt)) * (x @ sh["wu"].astype(dt))
+        out = out + hs @ sh["wd"].astype(dt)
+
+    # --- load-balance aux loss (Switch/GShard style) --------------------------
+    me = jnp.mean(gates.reshape(-1, E), axis=0)                  # avg router prob
+    ce = jnp.mean(
+        jax.nn.one_hot(top_i[..., 0], E, dtype=jnp.float32).reshape(-1, E),
+        axis=0)                                                  # top-1 load
+    aux = E * jnp.sum(me * ce) * mo.router_aux_weight
+    return out, aux

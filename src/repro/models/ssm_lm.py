@@ -1,0 +1,181 @@
+"""SSM / hybrid language models: mamba2-130m (pure SSD) and zamba2-1.2b
+(Mamba2 backbone + one *shared* transformer block every ``attn_every``
+layers, applied to concat(hidden, original embedding) — arXiv:2411.15242;
+the per-invocation LoRA adapters of the original are simplified away, noted
+in DESIGN.md §4).
+
+Both are scan-over-layers; the hybrid's shared-attention invocations are a
+``lax.cond`` inside the scan (slot index = layer // attn_every), so the
+lowered HLO stays one stacked Mamba2 layer + one shared block.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models.layers import (cross_entropy, embed_tokens, init_embed,
+                                 init_mlp, init_rms_norm, mlp_forward,
+                                 rms_norm, unembed)
+
+
+def n_shared_slots(cfg: ArchConfig) -> int:
+    if not cfg.attn_every:
+        return 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_ssm_lm(cfg: ArchConfig, key) -> Dict:
+    ks = jax.random.split(key, 4)
+    params: Dict = {"embed": init_embed(ks[0], cfg.vocab, cfg.d_model),
+                    "final_norm": init_rms_norm(cfg.d_model)}
+    lkeys = jax.random.split(ks[1], cfg.n_layers)
+
+    def one_layer(k):
+        return {"ln": init_rms_norm(cfg.d_model),
+                "mamba": m2.init_mamba2(k, cfg)}
+
+    params["layers"] = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[one_layer(k) for k in lkeys])
+    if cfg.attn_every:
+        k1, k2 = jax.random.split(ks[2])
+        params["shared"] = {
+            "ln_in": init_rms_norm(2 * cfg.d_model),
+            "attn": attn.init_attn(k1, cfg, d_in=2 * cfg.d_model),
+            "ln_mlp": init_rms_norm(cfg.d_model),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff),
+        }
+    return params
+
+
+def _shared_block(cfg: ArchConfig, sp, h, emb0, positions, window: int):
+    """Shared attention+MLP block on concat(h, emb0)."""
+    u = jnp.concatenate([h, emb0], axis=-1)
+    u = rms_norm(u, sp["ln_in"], cfg.norm_eps)
+    a, _ = attn.attn_forward(cfg, sp["attn"], u, positions=positions,
+                             window=window)
+    h = h + a
+    x = rms_norm(h, sp["ln_mlp"], cfg.norm_eps)
+    return h + mlp_forward(sp["mlp"], x)
+
+
+def ssm_lm_hidden(cfg: ArchConfig, params, tokens, *, window: int = 0):
+    dt = cfg.activation_dtype
+    emb0 = embed_tokens(params["embed"], tokens, dt)
+    h = emb0
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    use_kernel = False  # jnp reference on CPU; kernels validated separately
+    shared = params.get("shared")
+
+    def body(h, xs):
+        lp, idx = xs
+        x = rms_norm(h, lp["ln"], cfg.norm_eps)
+        h = h + m2.mamba2_forward(cfg, lp["mamba"], x, use_kernel=use_kernel)
+        if shared is not None:
+            flag = (idx % cfg.attn_every) == (cfg.attn_every - 1)
+            h = jax.lax.cond(
+                flag,
+                lambda hh: _shared_block(cfg, shared, hh, emb0, positions,
+                                         window),
+                lambda hh: hh,
+                h)
+        return h, None
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(scan_body, h,
+                        (params["layers"], jnp.arange(cfg.n_layers)))
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def ssm_lm_loss(cfg: ArchConfig, params, batch: Dict) -> jnp.ndarray:
+    tokens, labels = batch["tokens"], batch["labels"]
+    # the shared attn block (zamba2) uses its sliding window in training too
+    h = ssm_lm_hidden(cfg, params, tokens,
+                      window=cfg.sliding_window)
+    logits = unembed(params["embed"], h, cfg.final_softcap)
+    mask = (labels >= 0).astype(jnp.float32)
+    return cross_entropy(logits, jnp.maximum(labels, 0), mask)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    L = cfg.n_layers
+    per = m2.init_ssm_cache(cfg, batch, dtype)
+    cache = {"ssm": jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (L,) + x.shape).copy(), per)}
+    slots = n_shared_slots(cfg)
+    if slots:
+        hd = cfg.resolved_head_dim
+        # sliding-window shared attention at decode: cache only the window
+        # (sub-quadratic at long_500k — DESIGN.md §4)
+        T = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        cache["attn"] = {
+            "k": jnp.zeros((slots, batch, T, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((slots, batch, T, cfg.n_kv_heads, hd), dtype),
+        }
+        cache["emb0"] = None  # filled per-step (decode embeds current token)
+    return cache
+
+
+def ssm_lm_decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    """tokens (B,1), pos scalar -> (logits (B,1,V), new cache).
+
+    The shared attention block's KV cache is a ring buffer of the sliding
+    window; positions use rotary offsets so ring wrap-around is exact for
+    window-limited attention.
+    """
+    dt = cfg.activation_dtype
+    emb0 = embed_tokens(params["embed"], tokens, dt)
+    h = emb0
+    shared = params.get("shared")
+    attn_cache = cache.get("attn")
+
+    def shared_decode(hh, ac, slot):
+        u = jnp.concatenate([hh, emb0], axis=-1)
+        u = rms_norm(u, shared["ln_in"], cfg.norm_eps)
+        T = ac["k"].shape[2]
+        write = jnp.mod(pos, T)          # ring-buffer slot
+        kc = ac["k"][slot]
+        vc = ac["v"][slot]
+        # ring buffer of size window: after wrap every entry is live, so the
+        # causal mask position is min(pos, T-1) while writes go to pos % T
+        # and rotary positions stay absolute (matching the train path).
+        a, kc, vc = attn.attn_decode(
+            cfg, shared["attn"], u, kc, vc, write,
+            window=0, rope=True, rope_pos=pos,
+            mask_pos=jnp.minimum(pos, T - 1))
+        ac = {"k": ac["k"].at[slot].set(kc), "v": ac["v"].at[slot].set(vc)}
+        hh = hh + a
+        x = rms_norm(hh, shared["ln_mlp"], cfg.norm_eps)
+        return hh + mlp_forward(shared["mlp"], x), ac
+
+    new_ssm = []
+    ac = attn_cache
+    L = cfg.n_layers
+    for i in range(L):  # decode is unrolled: tiny per-layer compute
+        lp = jax.tree.map(lambda x: x[i], params["layers"])
+        lc = jax.tree.map(lambda x: x[i], cache["ssm"])
+        x = rms_norm(h, lp["ln"], cfg.norm_eps)
+        out, nc = m2.mamba2_decode(cfg, lp["mamba"], x, lc)
+        h = h + out
+        new_ssm.append(nc)
+        if shared is not None and (i % cfg.attn_every) == (cfg.attn_every - 1):
+            slot = i // cfg.attn_every
+            h, ac = shared_decode(h, ac, slot)
+
+    new_cache = {"ssm": jax.tree.map(lambda *xs: jnp.stack(xs), *new_ssm)}
+    if ac is not None:
+        new_cache["attn"] = ac
+        new_cache["emb0"] = None
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg.final_softcap)
+    return logits, new_cache

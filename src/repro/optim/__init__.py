@@ -1,0 +1,5 @@
+"""Minimal functional optimizers (paper's clients use plain SGD; Adam and
+momentum are provided for the beyond-paper server-update variants)."""
+from repro.optim.optimizers import (adam, momentum, sgd,            # noqa: F401
+                                    apply_updates, constant_lr,
+                                    cosine_lr)

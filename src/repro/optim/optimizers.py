@@ -1,0 +1,92 @@
+"""Functional optimizers: each is (init_fn, update_fn) over pytrees.
+
+update_fn(grads, opt_state, params) -> (updates, new_opt_state); apply with
+``apply_updates`` (updates are *subtracted*, SGD convention).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) - u.astype(jnp.float32))
+        .astype(p.dtype), params, updates)
+
+
+def constant_lr(lr: float):
+    return lambda step: lr
+
+
+def cosine_lr(lr: float, total_steps: int, warmup: int = 0):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        return lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return sched
+
+
+def sgd(lr) -> Optimizer:
+    sched = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        lr_t = sched(state["step"])
+        upd = jax.tree.map(lambda g: lr_t * g.astype(jnp.float32), grads)
+        return upd, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9) -> Optimizer:
+    sched = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)}
+
+    def update(grads, state, params=None):
+        m = jax.tree.map(lambda mm, g: beta * mm + g.astype(jnp.float32),
+                         state["m"], grads)
+        lr_t = sched(state["step"])
+        upd = jax.tree.map(lambda mm: lr_t * mm, m)
+        return upd, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    sched = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        z = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+        return {"step": jnp.zeros((), jnp.int32), "m": z(), "v": z()}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = sched(state["step"])
+        upd = jax.tree.map(
+            lambda mm, vv: lr_t * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps), m, v)
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,1 @@
+from repro.sharding.ctx import activation_sharding, shard_activation  # noqa: F401

@@ -1,0 +1,48 @@
+"""Activation-sharding context.
+
+Models are mesh-agnostic; the launch layer may install a mapping from
+*logical* activation names ("ffn", "attn_out", "moe_dispatch", ...) to
+``PartitionSpec``s.  When no context is installed (unit tests, CPU smoke),
+``shard_activation`` is a no-op, keeping the model code pure.
+
+This is the hook the §Perf hillclimb uses to steer XLA SPMD without
+touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, "jax.sharding.PartitionSpec"]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: Dict[str, "jax.sharding.PartitionSpec"]):
+    prev = _rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def shard_activation(x, name: str):
+    rules = _rules()
+    if rules is None or name not in rules:
+        return x
+    spec = rules[name]
+    # pad/trim the spec to the array rank
+    parts = list(spec)
+    if len(parts) < x.ndim:
+        parts = parts + [None] * (x.ndim - len(parts))
+    elif len(parts) > x.ndim:
+        parts = parts[: x.ndim]
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*parts))

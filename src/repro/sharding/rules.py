@@ -1,0 +1,238 @@
+"""Per-architecture PartitionSpec rules (DESIGN.md §5).
+
+Mesh axes: ``("data","model")`` single-pod; ``("pod","data","model")``
+multi-pod.  Tensor parallelism on ``model`` (attention heads / FFN hidden /
+MoE experts / vocab), client-cohort data parallelism on ``data``/``pod``,
+optional FSDP (2-D weight sharding) over the data axes for the ≥70B archs.
+
+Rules are *name-based* on the flattened parameter paths and right-aligned
+against the trailing dims, so stacked (scan-over-layers) leaves pick up
+leading ``None``s automatically.  Every sharded dim is divisibility-checked
+against the mesh; indivisible dims fall back to replication.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# archs whose weights additionally FSDP-shard over the data axes
+FSDP_ARCHS = {"deepseek-v3-671b", "qwen1.5-110b", "internvl2-76b"}
+
+# trailing-dim rules: suffix -> (spec for trailing dims, fsdp variant)
+_COL = ("wq", "wk", "wv", "wg", "wu", "w1", "w_uq", "w_uk", "w_uv",
+        "in_proj", "vis_proj", "proj")          # (d_in, big) -> shard dim -1
+_ROW = ("wo", "wd", "w2", "out_proj")           # (big, d_out) -> shard dim -2
+_BIAS = ("bq", "bk", "bv")
+_REPL = ("w_dq", "w_dkv", "w_krope", "router", "conv_b", "a_log", "dt_bias",
+         "d_skip", "gate_norm", "ln", "ln1", "ln2", "ln_in", "ln_mlp",
+         "ln_x", "ln1_post", "ln2_post", "final_norm", "enc_norm", "norm")
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _fits(dim_size: int, axes, sizes) -> bool:
+    if axes is None:
+        return True
+    total = int(np.prod([sizes[a] for a in (axes if isinstance(axes, tuple)
+                                            else (axes,))]))
+    return dim_size % total == 0
+
+
+def _guard(spec_parts, shape, sizes) -> P:
+    """Replace indivisible entries with None."""
+    out = []
+    for dim, axes in zip(shape, spec_parts):
+        out.append(axes if axes is not None and _fits(dim, axes, sizes)
+                   else None)
+    return P(*out)
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def param_spec(cfg: ArchConfig, path: str, shape: Tuple[int, ...],
+               mesh: Mesh, *, expert_both_axes: bool = False,
+               fsdp: Optional[bool] = None) -> P:
+    sizes = _axis_sizes(mesh)
+    if fsdp is None:
+        fsdp = cfg.arch_id in FSDP_ARCHS
+    d_ax = data_axes(mesh)
+    nd = len(shape)
+    name = path.rsplit("/", 1)[-1]
+    is_moe_expert = "/moe/" in path and name in ("wg", "wu", "wd")
+
+    def right(parts):
+        full = [None] * (nd - len(parts)) + list(parts)
+        return _guard(full, shape, sizes)
+
+    if is_moe_expert:
+        # (..., E, d, f): experts on model (expert parallel); optionally the
+        # big matrix dim FSDP-shards over data axes.  expert_both_axes
+        # spreads experts over the WHOLE mesh (serving layout: deepseek's
+        # 256 experts -> 1/device on 256 chips, zero weight gathers).
+        e_ax = tuple(d_ax) + ("model",) if expert_both_axes else "model"
+        f2 = fsdp and not expert_both_axes
+        if name in ("wg", "wu"):
+            return right([e_ax, d_ax if f2 else None, None])
+        return right([e_ax, None, d_ax if f2 else None])
+    if path.endswith("embed/tok"):
+        return right(["model", d_ax if fsdp else None])      # vocab-sharded
+    if path.endswith("embed/unembed"):
+        return right([d_ax if fsdp else None, "model"])
+    if name == "conv_w":
+        return right([None, "model"])
+    if name in _BIAS:
+        return right(["model"])
+    if name in _REPL or nd <= 1:
+        return P(*([None] * nd))
+    if name in _COL:
+        return right([d_ax if fsdp else None, "model"])
+    if name in _ROW:
+        return right(["model", d_ax if fsdp else None])
+    return P(*([None] * nd))
+
+
+def _paths_and_leaves(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    def pstr(kp):
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(f"#{k.idx}")
+            else:
+                parts.append(str(k))
+        return "/".join(parts)
+    return [(pstr(kp), leaf) for kp, leaf in flat], treedef
+
+
+def param_shardings(cfg: ArchConfig, params_shape, mesh: Mesh,
+                    model_parallel: bool = True, mode: str = "default"):
+    """NamedSharding pytree matching a params (or ShapeDtypeStruct) tree.
+
+    ``model_parallel=False`` replicates every parameter (pure data/cohort
+    parallelism — the §Perf "dp" variant for small archs whose per-layer
+    tensor-parallel all-reduces dominate their tiny compute).
+    ``mode="ep"``: full-mesh expert parallelism + no FSDP (serving layout —
+    kills per-step weight all-gathers at decode)."""
+    flat, treedef = _paths_and_leaves(params_shape)
+    if not model_parallel:
+        specs = [NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+                 for _, leaf in flat]
+    elif mode == "ep":
+        specs = [NamedSharding(mesh, param_spec(cfg, path, leaf.shape, mesh,
+                                                expert_both_axes=True,
+                                                fsdp=False))
+                 for path, leaf in flat]
+    else:
+        specs = [NamedSharding(mesh, param_spec(cfg, path, leaf.shape, mesh))
+                 for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_shape, mesh: Mesh, axes=None):
+    """tokens/labels (B,S) etc: batch dim over (pod,data) — or an explicit
+    axis tuple (the §Perf "dp2d" variant shards batch over every axis)."""
+    sizes = _axis_sizes(mesh)
+    d_ax = tuple(axes) if axes is not None else data_axes(mesh)
+
+    def one(leaf):
+        parts = [d_ax] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, _guard(parts, leaf.shape, sizes))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(cfg: ArchConfig, cache_shape, mesh: Mesh,
+                    seq_on_model: bool = True):
+    """KV/SSM caches: batch on data; heads on model when divisible, else
+    the sequence dim on model (long_500k B=1 sequence-sharded caches).
+    ``seq_on_model=False`` disables the sequence fallback (the §Perf
+    "cache=batch" decode variant: replicated-over-model caches avoid the
+    per-step gather at the cost of cache memory)."""
+    sizes = _axis_sizes(mesh)
+    d_ax = data_axes(mesh)
+    m = sizes["model"]
+    flat, treedef = _paths_and_leaves(cache_shape)
+    out = []
+    for path, leaf in flat:
+        shape = leaf.shape
+        nd = len(shape)
+        name = path.rsplit("/", 1)[-1]
+        parts = [None] * nd
+        # layout conventions (leading L = stacked layers):
+        if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+            # (L,B,T,Hkv,hd) or (B,T,Hkv,hd)
+            b_i, t_i, h_i = nd - 4, nd - 3, nd - 2
+            parts[b_i] = d_ax
+            if shape[h_i] % m == 0:
+                parts[h_i] = "model"
+            elif seq_on_model and shape[t_i] % m == 0:
+                parts[t_i] = "model"
+        elif name in ("ckv", "krope"):
+            # (L,B,T,r)
+            parts[nd - 3] = d_ax
+            if seq_on_model and shape[nd - 2] % m == 0:
+                parts[nd - 2] = "model"
+        elif name == "state":
+            # (L,B,H,P,N)
+            parts[nd - 4] = d_ax
+            if shape[nd - 3] % m == 0:
+                parts[nd - 3] = "model"
+        elif name == "conv":
+            # (L,B,W-1,conv_dim)
+            parts[nd - 3] = d_ax
+            if shape[nd - 1] % m == 0:
+                parts[nd - 1] = "model"
+        out.append(NamedSharding(mesh, _guard(parts, shape, sizes)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def strip_axes(rules_dict: Dict[str, P], axes) -> Dict[str, P]:
+    """Remove the given mesh axes from every rule (None them out) — used
+    inside shard_map regions where those axes are Manual."""
+    axes = set(axes)
+
+    def strip(spec: P) -> P:
+        out = []
+        for part in spec:
+            if part is None:
+                out.append(None)
+            elif isinstance(part, tuple):
+                kept = tuple(a for a in part if a not in axes)
+                out.append(kept if kept else None)
+            else:
+                out.append(None if part in axes else part)
+        return P(*out)
+
+    return {k: strip(v) for k, v in rules_dict.items()}
+
+
+def default_activation_rules(mesh: Mesh) -> Dict[str, P]:
+    """Logical activation-name -> PartitionSpec (see repro.sharding.ctx)."""
+    d_ax = data_axes(mesh)
+    return {
+        "residual": P(d_ax, None, None),
+        "ffn": P(d_ax, None, "model"),
+        "attn_out": P(d_ax, None, "model"),
+        "ssm_out": P(d_ax, None, "model"),
+        "moe_dispatch": P(d_ax, None, "model", None),
+        "moe_expert_in": P("model", d_ax, None, None),
+    }

@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each family (2 layers, d_model<=512, <=4 experts) runs one forward/train
+step and one decode step on CPU; shapes and finiteness asserted."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs, reduce_for_smoke
+from repro.core import PersAFLConfig
+from repro.launch.steps import make_train_step
+from repro.models import api
+
+ARCHS = list_archs()
+
+
+def _smoke_cfg(arch):
+    return reduce_for_smoke(get_config(arch))
+
+
+def _train_batch(cfg, key, B=2, S=32):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.n_visual_tokens:
+        batch["visual"] = jax.random.normal(
+            key, (B, cfg.n_visual_tokens, cfg.d_model))
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(key, (B, cfg.enc_len, cfg.d_model))
+    return batch
+
+
+def test_reduced_limits():
+    for arch in ARCHS:
+        cfg = _smoke_cfg(arch)
+        assert cfg.n_layers == 2
+        assert cfg.d_model <= 512
+        if cfg.moe is not None:
+            assert cfg.moe.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss_finite(arch):
+    cfg = _smoke_cfg(arch)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, key)
+    loss = api.loss_fn(cfg, params, _train_batch(cfg, key))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_persafl_train_step(arch):
+    """One full PersA-FL client round + server apply on the reduced arch."""
+    cfg = _smoke_cfg(arch)
+    key = jax.random.PRNGKey(1)
+    params = api.init_params(cfg, key)
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.01)
+    step = jax.jit(make_train_step(cfg, pcfg, n_microbatches=1))
+    batch = _train_batch(cfg, key)
+    new_params, metrics = step(params, params, batch)
+    # shapes preserved, update applied, everything finite
+    jax.tree.map(lambda a, b: None if a.shape == b.shape else
+                 pytest.fail("shape changed"), params, new_params)
+    assert bool(jnp.isfinite(metrics["delta_norm"]))
+    assert float(metrics["delta_norm"]) > 0
+    leaves = jax.tree.leaves(new_params)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_shapes(arch):
+    cfg = _smoke_cfg(arch)
+    key = jax.random.PRNGKey(2)
+    params = api.init_params(cfg, key)
+    B = 2
+    batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(key, (B, cfg.enc_len, cfg.d_model))
+    cache = api.init_cache(cfg, params, batch, max_len=8, dtype=jnp.float32)
+    logits, cache = api.decode_step(cfg, params, cache, batch["tokens"],
+                                    jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    logits2, _ = api.decode_step(cfg, params, cache, batch["tokens"] + 1,
+                                 jnp.int32(1))
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "mamba2-130m",
+                                  "granite-moe-1b-a400m", "zamba2-1.2b",
+                                  "whisper-large-v3", "deepseek-v3-671b"])
+def test_prefill_decode_equivalence(arch):
+    """Teacher-forced logits == step-by-step decode (MoE: no-drop regime)."""
+    cfg = _smoke_cfg(arch)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    key = jax.random.PRNGKey(42)
+    params = api.init_params(cfg, key)
+    B, S = 1, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    from repro.models import encdec as ed
+    from repro.models import lm, ssm_lm
+    from repro.models.layers import unembed
+    if cfg.family in ("ssm", "hybrid"):
+        h = ssm_lm.ssm_lm_hidden(cfg, params, toks, window=cfg.sliding_window)
+        full = unembed(params["embed"], h, cfg.final_softcap)
+    elif cfg.is_encdec:
+        batch["frames"] = jax.random.normal(key, (B, cfg.enc_len, cfg.d_model))
+        ench = ed.encode(cfg, params, batch["frames"])
+        h = ed.decode_full(cfg, params, toks, ench)
+        full = unembed(params["embed"], h, cfg.final_softcap)
+    else:
+        full, _ = lm.lm_logits(cfg, params, toks)
+    cache = api.init_cache(cfg, params, batch, max_len=S, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, cache = api.decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                    jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(full - dec)))
+    assert err < 5e-4, err
+
+
+def test_vlm_visual_tokens_required():
+    cfg = _smoke_cfg("internvl2-76b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(AssertionError):
+        api.loss_fn(cfg, params, {"tokens": jnp.zeros((1, 8), jnp.int32),
+                                  "labels": jnp.zeros((1, 8), jnp.int32)})

@@ -1,0 +1,143 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PersAFLConfig, apply_update, client_update,
+                        init_server_state, solve_prox)
+from repro.models.moe import expert_capacity, moe_forward
+from repro.configs import get_config, reduce_for_smoke
+
+SET = settings(max_examples=20, deadline=None)
+
+
+def quad_loss(w, batch):
+    r = batch["a"] @ w["w"] - batch["y"]
+    return 0.5 * jnp.mean(r ** 2)
+
+
+@st.composite
+def quadratic(draw):
+    d = draw(st.integers(2, 6))
+    m = draw(st.integers(8, 24))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.RandomState(seed)
+    A = rng.randn(m, d).astype(np.float32)
+    y = rng.randn(m).astype(np.float32)
+    return jnp.asarray(A), jnp.asarray(y)
+
+
+@SET
+@given(quadratic(), st.floats(8.0, 64.0))
+def test_prox_contraction_toward_w_as_lambda_grows(q, lam):
+    """Lemma-6 regime: as λ→∞, θ̃(w) → w (‖θ−w‖ ≤ ‖∇f(w)‖/(λ−L))."""
+    A, y = q
+    batch = {"a": A, "y": y}
+    w = {"w": jnp.zeros(A.shape[1])}
+    t_small, _ = solve_prox(quad_loss, w, batch, lam, 1.0 / (4 * lam), 200)
+    t_big, _ = solve_prox(quad_loss, w, batch, 4 * lam, 1.0 / (16 * lam), 200)
+    d_small = float(jnp.linalg.norm(t_small["w"] - w["w"]))
+    d_big = float(jnp.linalg.norm(t_big["w"] - w["w"]))
+    assert d_big <= d_small + 1e-5
+
+
+@SET
+@given(quadratic(), st.integers(1, 6), st.floats(0.001, 0.05))
+def test_delta_scales_linearly_with_eta_first_order(q, q_local, eta):
+    """For Option A, Δ(η)/η → Σ∇f as η→0 (telescoping consistency)."""
+    A, y = q
+    batches = {"a": jnp.stack([A] * q_local), "y": jnp.stack([y] * q_local)}
+    w = {"w": jnp.ones(A.shape[1])}
+    d1, _ = client_update(PersAFLConfig(option="A", q_local=q_local, eta=eta),
+                          quad_loss, w, batches)
+    d2, _ = client_update(PersAFLConfig(option="A", q_local=q_local,
+                                        eta=eta / 2), quad_loss, w, batches)
+    # halving eta at least halves the delta norm (up to curvature terms)
+    n1 = float(jnp.linalg.norm(d1["w"]))
+    n2 = float(jnp.linalg.norm(d2["w"]))
+    assert n2 <= 0.75 * n1 + 1e-6
+
+
+@SET
+@given(st.integers(0, 10), st.integers(0, 10), st.floats(0.1, 2.0))
+def test_server_counter_and_staleness_accounting(s1, s2, beta):
+    state = init_server_state({"w": jnp.zeros(3)})
+    state = apply_update(state, {"w": jnp.ones(3)}, beta, s1)
+    state = apply_update(state, {"w": jnp.ones(3)}, beta, s2)
+    assert int(state["t"]) == 2
+    assert int(state["staleness_max"]) == max(s1, s2)
+    np.testing.assert_allclose(np.asarray(state["params"]["w"]),
+                               -2 * beta, rtol=1e-6)
+
+
+@SET
+@given(st.integers(2, 64), st.integers(2, 8), st.integers(1, 4),
+       st.floats(1.0, 2.0))
+def test_expert_capacity_bounds(tokens, experts, topk, cf):
+    from repro.configs.base import MoEConfig
+    mo = MoEConfig(n_experts=experts, top_k=min(topk, experts),
+                   expert_d_ff=8, capacity_factor=cf)
+    C = expert_capacity(tokens, mo)
+    assert C >= mo.top_k
+    assert C * experts >= tokens * mo.top_k  # can host all assignments at cf>=1
+
+
+@SET
+@given(st.integers(0, 2 ** 16))
+def test_moe_forward_finite_and_bounded(seed):
+    cfg = reduce_for_smoke(get_config("granite-moe-1b-a400m"))
+    key = jax.random.PRNGKey(seed)
+    from repro.models.moe import init_moe
+    p = init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    out, aux = moe_forward(cfg, p, x)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(aux) >= 0.0
+
+
+@SET
+@given(st.integers(0, 2 ** 16), st.integers(1, 3))
+def test_checkpoint_roundtrip(seed, depth):
+    from repro.checkpoint import load_pytree, save_pytree
+    import tempfile, os
+    rng = np.random.RandomState(seed)
+
+    def build(d):
+        if d == 0:
+            return rng.randn(*rng.randint(1, 4, size=2)).astype(np.float32)
+        return {f"k{i}": build(d - 1) for i in range(2)} if rng.rand() < 0.7 \
+            else [build(d - 1), build(d - 1)]
+
+    tree = {"root": build(depth), "scalar": np.float32(rng.randn())}
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ckpt")
+        save_pytree(path, tree)
+        back = load_pytree(path)
+    flat1 = jax.tree.leaves(tree)
+    flat2 = jax.tree.leaves(back)
+    assert len(flat1) == len(flat2)
+    for a, b in zip(flat1, flat2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@SET
+@given(st.integers(0, 2 ** 16), st.integers(1, 48))
+def test_flash_attention_property_random_shapes(seed, s_mult):
+    """Kernel == oracle on randomly drawn (block-aligned) shapes."""
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd
+    from repro.kernels.flash_attention.ref import attention_ref
+    rng = np.random.RandomState(seed)
+    S = 32 * (1 + seed % 4)
+    Hkv = int(rng.choice([1, 2]))
+    Hq = Hkv * int(rng.choice([1, 2, 4]))
+    hd = int(rng.choice([16, 32]))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, S, Hq, hd))
+    k = jax.random.normal(ks[1], (1, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (1, S, Hkv, hd))
+    out = flash_attention_fwd(q, k, v, block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
+                               rtol=1e-4)
