@@ -6,6 +6,8 @@
   fig2c_cifar         — same on CIFAR-like data (Figure 2c)
   table1_staleness    — FedAsync convergence vs maximum delay τ (Table 1's
                         O(1/√T)+O(τ²/T) staleness term, empirically)
+  engine              — vectorized cohort engine vs per-event dispatch,
+                        32-client buffered-async run (wall-clock speedup)
   kernels             — Pallas kernels (interpret) vs jnp oracle, µs/call
 
 Prints ``name,us_per_call,derived`` CSV lines (plus per-figure CSV blocks).
@@ -121,6 +123,74 @@ def table1_staleness():
     return rows
 
 
+def engine():
+    """Cohort engine speedup: one vmapped call per inter-apply window vs one
+    jitted dispatch per client event, same BufferedAsyncSimulator schedule.
+
+    Uses the dispatch-bound regime the engine targets — a per-user
+    personalized head (logistic model on feature vectors, the serving-side
+    workload): at 32+ concurrent clients the per-event path pays O(cohort)
+    device round-trips per window, the engine pays one."""
+    from repro.core import PersAFLConfig, init_server_state
+    from repro.data.federated import ClientData
+    from repro.fl import BufferedAsyncSimulator, DelayModel
+
+    d, n_clients = 32, 32
+    rng = np.random.RandomState(0)
+    clients = []
+    for _ in range(n_clients):
+        x = rng.randn(256, d).astype(np.float32)
+        y = rng.randint(0, 10, 256).astype(np.int32)
+        clients.append(ClientData(train_x=x, train_y=y, test_x=x[:32],
+                                  test_y=y[:32], classes=tuple(range(10))))
+
+    def loss(p, b):
+        logits = b["images"] @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.sum(jax.nn.one_hot(b["labels"], 10) * logp, -1))
+
+    params = {"w": jnp.zeros((d, 10)), "b": jnp.zeros((10,))}
+    rounds = 1536 if FAST else 4096
+    walls, calls = {}, {}
+    for vectorized in (True, False):
+        sim = BufferedAsyncSimulator(
+            clients=clients, loss_fn=loss, init_params=params,
+            pcfg=PersAFLConfig(option="A", q_local=1, eta=0.05,
+                               buffer_size=32),
+            delays=DelayModel(len(clients), seed=1), batch_size=8, seed=0,
+            vectorized=vectorized)
+        def reset():
+            # replay the identical schedule every repetition: fresh batch
+            # rng + delay streams + server state, so warm-up compiles every
+            # cohort bucket the timed runs will see
+            sim.rng = np.random.RandomState(0)
+            sim.delays = DelayModel(len(clients), seed=1)
+            sim.state = init_server_state(jax.tree.map(jnp.array, params))
+            sim.engine.stats.update(cohort_calls=0, clients=0, max_cohort=0)
+
+        reset()
+        sim.run(max_server_rounds=rounds)          # warm-up: compiles
+        best = float("inf")
+        for _ in range(3):                         # best-of-3: 2-vCPU noise
+            reset()
+            t0 = time.time()
+            sim.run(max_server_rounds=rounds)
+            best = min(best, time.time() - t0)
+        walls[vectorized] = best
+        stats = dict(sim.engine.stats)             # identical per repetition
+        calls[vectorized] = max(stats["cohort_calls"], 1)
+        path = "vectorized" if vectorized else "per_event"
+        print(f"engine,{path},wall_s={walls[vectorized]:.3f},"
+              f"cohort_calls={stats['cohort_calls']},"
+              f"max_cohort={stats['max_cohort']}", flush=True)
+    speedup = walls[False] / walls[True]
+    print(f"engine,{walls[True] / calls[True] * 1e6:.0f},"
+          f"speedup={speedup:.2f}")
+    _save("engine", {"wall_vectorized_s": walls[True],
+                     "wall_per_event_s": walls[False], "speedup": speedup})
+    return speedup
+
+
 def kernels():
     """µs/call for each Pallas kernel (interpret) and its jnp oracle."""
     from repro.kernels.flash_attention.kernel import flash_attention_fwd
@@ -166,6 +236,7 @@ BENCHES = {
     "fig2b": fig2b_mnist,
     "fig2c": fig2c_cifar,
     "table1": table1_staleness,
+    "engine": engine,
     "kernels": kernels,
 }
 

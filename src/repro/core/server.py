@@ -6,16 +6,25 @@ Paper-faithful mode: on receiving Δ from any client, immediately
 
 Beyond-paper (FedBuff [51]; unbounded-gradient analysis [63]): a buffered
 variant aggregates M deltas then applies their mean once — on the TPU mesh
-this is one psum over the cohort axes per round (DESIGN.md §2/§5).
+this is one psum over the cohort axes per round (DESIGN.md §2/§5).  The
+event-driven counterpart is :class:`repro.fl.simulator.BufferedAsyncSimulator`,
+which feeds :func:`apply_buffered` one (Σ Δ, M, Σ τ, max τ) tuple per flush.
+
+Every apply routes through ``kernels/fused_update.apply_delta_tree`` — a
+single read-modify-write pass per leaf with a *traced* scale, so one compile
+serves every staleness value, buffer count, and the optional FedAsync-style
+polynomial staleness damping β/(1+τ)^a (``PersAFLConfig.staleness_damping``).
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.types import PersAFLConfig
+from repro.kernels.fused_update.ops import apply_delta_tree, donate_argnums
 
 
 def init_server_state(params) -> Dict:
@@ -27,38 +36,73 @@ def init_server_state(params) -> Dict:
     }
 
 
-def apply_update(state: Dict, delta, beta: float, staleness) -> Dict:
-    """Paper-faithful single-delta apply (Algorithm 1 step 4)."""
-    staleness = jnp.asarray(staleness, jnp.int32)
-    params = jax.tree.map(
-        lambda w, d: (w.astype(jnp.float32) - beta * d.astype(jnp.float32))
-        .astype(w.dtype), state["params"], delta)
-    return {
-        "params": params,
-        "t": state["t"] + 1,
-        "staleness_sum": state["staleness_sum"] + staleness.astype(jnp.float32),
-        "staleness_max": jnp.maximum(state["staleness_max"], staleness),
-    }
+# the whole apply — fused param update AND the counter/staleness
+# bookkeeping — is one jitted call: the schedulers invoke it once per
+# server round, and a handful of eager scalar ops per round used to cost
+# as much as the update itself.  beta/staleness/damping stay traced, so
+# one compile serves the entire run.  The jits are built lazily (cached)
+# so importing repro.core never initializes the JAX backend.
+
+@functools.lru_cache(maxsize=None)
+def _apply_update_jit():
+    @functools.partial(jax.jit, donate_argnums=donate_argnums(0))
+    def apply(state, delta, beta, staleness, damping):
+        staleness = jnp.asarray(staleness, jnp.int32)
+        scale = jnp.asarray(beta, jnp.float32) \
+            * (1.0 + staleness.astype(jnp.float32)) ** (-damping)
+        return {
+            "params": apply_delta_tree(state["params"], delta, scale),
+            "t": state["t"] + 1,
+            "staleness_sum": state["staleness_sum"]
+            + staleness.astype(jnp.float32),
+            "staleness_max": jnp.maximum(state["staleness_max"], staleness),
+        }
+    return apply
+
+
+def apply_update(state: Dict, delta, beta: float, staleness,
+                 damping: float = 0.0) -> Dict:
+    """Paper-faithful single-delta apply (Algorithm 1 step 4).
+
+    ``damping`` > 0 enables the FedAsync-style polynomial staleness
+    discount s(τ) = (1+τ)^(-damping) on the server stepsize (beyond-paper;
+    0 keeps the theorems' constant β).
+    """
+    return _apply_update_jit()(state, delta, beta, staleness,
+                               jnp.float32(damping))
+
+
+@functools.lru_cache(maxsize=None)
+def _apply_buffered_jit():
+    @functools.partial(jax.jit, donate_argnums=donate_argnums(0))
+    def apply(state, delta_sum, count, beta, staleness_max, staleness_sum):
+        count = jnp.asarray(count)
+        scale = beta / jnp.maximum(count.astype(jnp.float32), 1.0)
+        return {
+            "params": apply_delta_tree(state["params"], delta_sum, scale),
+            "t": state["t"] + count.astype(jnp.int32),
+            "staleness_sum": state["staleness_sum"]
+            + jnp.asarray(staleness_sum, jnp.float32),
+            "staleness_max": jnp.maximum(state["staleness_max"],
+                                         jnp.asarray(staleness_max,
+                                                     jnp.int32)),
+        }
+    return apply
 
 
 def apply_buffered(state: Dict, delta_sum, count, beta: float,
-                   staleness_max) -> Dict:
+                   staleness_max, staleness_sum=0.0) -> Dict:
     """FedBuff-style buffered apply: w ← w − β/M Σ Δ (one server round).
 
     ``delta_sum`` is typically the result of a psum over the cohort mesh
-    axes; ``count`` the number of contributing clients M.
+    axes; ``count`` the number of contributing clients M.  ``staleness_sum``
+    is the Σ τ over the buffer's M contributing deltas — the version counter
+    advances by M per flush, so omitting it under-reports ``mean_staleness``
+    in :func:`staleness_stats` (each buffered delta is one applied update of
+    Assumption 1's bookkeeping).
     """
-    scale = beta / jnp.maximum(count.astype(jnp.float32), 1.0)
-    params = jax.tree.map(
-        lambda w, d: (w.astype(jnp.float32) - scale * d.astype(jnp.float32))
-        .astype(w.dtype), state["params"], delta_sum)
-    return {
-        "params": params,
-        "t": state["t"] + count.astype(jnp.int32),
-        "staleness_sum": state["staleness_sum"],
-        "staleness_max": jnp.maximum(state["staleness_max"],
-                                     jnp.asarray(staleness_max, jnp.int32)),
-    }
+    return _apply_buffered_jit()(state, delta_sum, count, beta,
+                                 staleness_max, staleness_sum)
 
 
 def staleness_stats(state: Dict) -> Dict:

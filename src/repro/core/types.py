@@ -26,8 +26,13 @@ class PersAFLConfig:
     inner_eta: float = 0.03    # inner solver stepsize
     nu_target: float = 1e-3    # ν accuracy target (reported, not enforced)
 
-    # beyond-paper: buffered server aggregation (FedBuff [51,63])
-    buffer_size: int = 1       # 1 = paper-faithful immediate apply
+    # beyond-paper: buffered server aggregation (FedBuff [51,63]) — M deltas
+    # are summed and applied as one w ← w − β/M ΣΔ server round
+    # (BufferedAsyncSimulator); 1 = paper-faithful immediate apply
+    buffer_size: int = 1
+    # beyond-paper: FedAsync-style polynomial staleness damping a in
+    # β/(1+τ)^a on async applies; 0 = paper-faithful constant β
+    staleness_damping: float = 0.0
     # delta accumulator dtype ("float32" faithful; "bfloat16" halves the
     # client-delta memory/traffic on multi-B-param archs — §Perf knob)
     delta_dtype: str = "float32"

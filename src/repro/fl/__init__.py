@@ -1,3 +1,6 @@
 from repro.fl.delays import DelayModel                       # noqa: F401
-from repro.fl.simulator import AsyncSimulator, SyncSimulator, History  # noqa: F401
+from repro.fl.engine import CohortEngine                      # noqa: F401
+from repro.fl.simulator import (AsyncSimulator,               # noqa: F401
+                                BufferedAsyncSimulator, History,
+                                SyncSimulator)
 from repro.fl.evaluate import make_personalized_eval          # noqa: F401

@@ -6,32 +6,48 @@ local compute.  The simulator drives the *same jitted client/server step
 functions* as the production launcher — only event ordering is simulated
 (DESIGN.md §2).
 
-Two schedulers:
+Three schedulers:
   * :class:`AsyncSimulator` — Algorithm 1: the server applies each client's
     Δ the moment it arrives; staleness τ is measured per update.
+  * :class:`BufferedAsyncSimulator` — FedBuff-style [51,63]: arrivals are
+    buffered and M deltas are applied as one w ← w − β/M ΣΔ server round
+    (``PersAFLConfig.buffer_size``); staleness bookkeeping still counts
+    every contributing delta.
   * :class:`SyncSimulator`  — FedAvg-family rounds: sample m clients, wait
     for the slowest, apply the averaged Δ (supports FedAvg / Per-FedAvg /
     pFedMe / FedProx / SCAFFOLD via ``algo``).
 
-Both record the active-client ratio over time (paper Figure 2a) and
-accuracy-vs-simulated-time via a pluggable eval callback.
+Execution engine: per-client compute is *deferred*.  A client's batches are
+recorded when its download completes and materialized lazily — in one
+:class:`repro.fl.engine.CohortEngine` vmap-over-clients call — right before
+the next server apply.  Because params only change at applies, every delta
+is computed on exactly the snapshot the per-event path would have used,
+while the device sees one batched call per inter-apply window instead of
+one call per client (the win grows with ``buffer_size``: applies thin out,
+cohorts fatten up).  Server applies route through the fused-update Pallas
+op (one read-modify-write pass, traced scale).
+
+All schedulers record the active-client ratio over time (paper Figure 2a)
+and accuracy-vs-simulated-time via a pluggable eval callback.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PersAFLConfig, apply_update, client_update,
-                        init_server_state, split_batches_for_option)
+from repro.core import (PersAFLConfig, apply_buffered, apply_update,
+                        init_server_state)
 from repro.core.server import staleness_stats
 from repro.data.federated import ClientData, sample_batches
 from repro.fl.algorithms import fedprox_update, scaffold_update
 from repro.fl.delays import DelayModel
+from repro.fl.engine import CohortEngine
+from repro.kernels.fused_update.ops import apply_delta_tree
 
 
 @dataclasses.dataclass
@@ -47,29 +63,69 @@ class History:
         return dataclasses.asdict(self)
 
 
+def _own_copy(params):
+    """Private copy of the caller's params: server applies donate the old
+    buffer (in-place on TPU), which must never invalidate caller arrays."""
+    return jax.tree.map(lambda x: jnp.array(x), params)
+
+
 class AsyncSimulator:
-    """PersA-FL / FedAsync event-driven runner (Algorithms 1 & 2)."""
+    """PersA-FL / FedAsync event-driven runner (Algorithms 1 & 2).
+
+    ``vectorized=False`` keeps the per-event sequential dispatch (the
+    baseline the ``engine`` benchmark row measures against).
+    """
 
     def __init__(self, *, clients: List[ClientData], loss_fn: Callable,
                  init_params, pcfg: PersAFLConfig, delays: DelayModel,
-                 batch_size: int = 32, seed: int = 0):
+                 batch_size: int = 32, seed: int = 0,
+                 vectorized: bool = True):
         self.clients = clients
         self.pcfg = pcfg
         self.delays = delays
         self.batch_size = batch_size
         self.rng = np.random.RandomState(seed)
         self.loss_fn = loss_fn
-        self.state = init_server_state(init_params)
-
-        def _update(params, batches_3q):
-            batches = split_batches_for_option(pcfg.option, batches_3q)
-            return client_update(pcfg, loss_fn, params, batches)
-
-        self._jit_update = jax.jit(_update)
+        self.state = init_server_state(_own_copy(init_params))
+        self.engine = CohortEngine(pcfg, loss_fn, vectorized=vectorized)
 
     def _sample(self, i: int):
         return sample_batches(self.clients[i], self.rng,
                               3 * self.pcfg.q_local, self.batch_size)
+
+    # -- apply-side hook (overridden by BufferedAsyncSimulator) ------------
+
+    def _on_upload(self, now: float, rid: int, version: int, hist: History,
+                   eval_fn, eval_every: int) -> None:
+        """Paper-faithful Algorithm 1: apply the delta the moment it lands."""
+        self._flush()
+        delta = self._computed.pop(rid)
+        # _t mirrors state["t"] host-side: reading the device scalar every
+        # event would force a sync per event — O(n) stalls per window
+        staleness = self._t - version
+        hist.staleness.append(staleness)
+        self.state = apply_update(self.state, delta, self.pcfg.beta,
+                                  staleness,
+                                  damping=self.pcfg.staleness_damping)
+        self._t += 1
+        if eval_fn is not None and self._t % eval_every == 0:
+            hist.times.append(now)
+            hist.rounds.append(self._t)
+            hist.acc.append(float(eval_fn(self.state["params"])))
+
+    def _flush(self) -> None:
+        """Materialize every pending client update in one cohort call.
+
+        Called right before any server apply: params have not changed since
+        these clients' downloads completed, so the whole cohort shares one
+        snapshot and the vmapped call is exact."""
+        if not self._pending:
+            return
+        deltas = self.engine.update_cohort(
+            self.state["params"], [b for _, b in self._pending])
+        for (rid, _), d in zip(self._pending, deltas):
+            self._computed[rid] = d
+        self._pending = []
 
     def run(self, *, max_server_rounds: int, eval_every: int = 50,
             eval_fn: Optional[Callable] = None,
@@ -78,7 +134,7 @@ class AsyncSimulator:
         n = len(self.clients)
         heap: List = []
         seq = 0
-        # phase[i]: ("down"|"up", finish_time); download requests start at t=0
+        # download requests start at t=0
         for i in range(n):
             t_done = self.delays.sample_download(i)
             heapq.heappush(heap, (t_done, seq, "down_done", i, None))
@@ -86,8 +142,12 @@ class AsyncSimulator:
         now = 0.0
         next_active_t = 0.0
         busy_up = {i: None for i in range(n)}  # upload finish times
+        self._pending: List[Tuple[int, Dict]] = []  # (rid, batches)
+        self._computed: Dict[int, Dict] = {}        # rid -> delta
+        self._t = int(self.state["t"])              # host-side round mirror
+        next_rid = 0
 
-        while self.state["t"] < max_server_rounds and heap:
+        while self._t < max_server_rounds and heap:
             now, _, kind, i, payload = heapq.heappop(heap)
             # record active ratio on a time grid: active = computing/uploading
             while next_active_t <= now:
@@ -97,26 +157,19 @@ class AsyncSimulator:
                 hist.active_ratio.append(up_now / n)
                 next_active_t += record_active_every
             if kind == "down_done":
-                version = int(self.state["t"])
-                delta, _ = self._jit_update(self.state["params"],
-                                            self._sample(i))
+                version = self._t
+                rid = next_rid
+                next_rid += 1
+                self._pending.append((rid, self._sample(i)))
                 t_up = now + self.delays.sample_upload(i)
                 busy_up[i] = t_up
                 heapq.heappush(heap, (t_up, seq, "up_done", i,
-                                      (delta, version)))
+                                      (rid, version)))
                 seq += 1
             elif kind == "up_done":
-                delta, version = payload
-                staleness = int(self.state["t"]) - version
-                hist.staleness.append(staleness)
-                self.state = apply_update(self.state, delta, self.pcfg.beta,
-                                          staleness)
+                rid, version = payload
+                self._on_upload(now, rid, version, hist, eval_fn, eval_every)
                 busy_up[i] = None
-                t_round = int(self.state["t"])
-                if eval_fn is not None and t_round % eval_every == 0:
-                    hist.times.append(now)
-                    hist.rounds.append(t_round)
-                    hist.acc.append(float(eval_fn(self.state["params"])))
                 t_down = now + self.delays.sample_download(i)
                 heapq.heappush(heap, (t_down, seq, "down_done", i, None))
                 seq += 1
@@ -125,14 +178,75 @@ class AsyncSimulator:
         return hist
 
 
+class BufferedAsyncSimulator(AsyncSimulator):
+    """FedBuff-style buffered asynchronous scheduler (beyond-paper [51,63]).
+
+    Arrivals accumulate in a size-M buffer (``pcfg.buffer_size``); when full,
+    every still-pending client update is materialized in ONE cohort call and
+    the buffer is applied as one w ← w − β/M ΣΔ server round.  Between
+    flushes the params are frozen, so cohorts grow to ≳M clients — this is
+    the scheduler the vectorized engine was built for.  Staleness Σ/max are
+    accounted per contributing delta (Assumption 1 bookkeeping).
+
+    Note: t advances in M-sized jumps, so a run stops at the first flush
+    that reaches ``max_server_rounds`` — the final t is the next multiple
+    of M (an overshoot bounded by M), like finishing a partial epoch."""
+
+    def __init__(self, *, buffer_size: Optional[int] = None, **kw):
+        super().__init__(**kw)
+        self.buffer_size = buffer_size or max(int(self.pcfg.buffer_size), 1)
+        self._buffer: List[Tuple[int, int]] = []  # (rid, staleness)
+
+    def run(self, **kw) -> History:
+        self._buffer = []
+        return super().run(**kw)
+
+    def _on_upload(self, now: float, rid: int, version: int, hist: History,
+                   eval_fn, eval_every: int) -> None:
+        staleness = self._t - version
+        hist.staleness.append(staleness)
+        self._buffer.append((rid, staleness))
+        if len(self._buffer) < self.buffer_size:
+            return
+        self._flush()  # materialize buffered AND in-flight pending deltas
+        deltas = [self._computed.pop(r) for r, _ in self._buffer]
+        stales = [s for _, s in self._buffer]
+        damping = self.pcfg.staleness_damping
+        if damping:
+            # per-delta FedAsync-style discount BEFORE the mean — a single
+            # post-sum scale could not tell fresh deltas from stale ones
+            deltas = [jax.tree.map(lambda x: x * (1.0 + s) ** (-damping), d)
+                      for d, s in zip(deltas, stales)]
+        delta_sum = jax.tree.map(lambda *xs: sum(xs), *deltas)
+        t_old = self._t
+        self.state = apply_buffered(self.state, delta_sum, len(deltas),
+                                    self.pcfg.beta,
+                                    staleness_max=max(stales),
+                                    staleness_sum=float(sum(stales)))
+        self._buffer = []
+        self._t = t_old + len(deltas)
+        # t jumps by M per flush: eval whenever a multiple of eval_every
+        # is crossed (the immediate-apply modulo test would skip most)
+        if eval_fn is not None \
+                and self._t // eval_every > t_old // eval_every:
+            hist.times.append(now)
+            hist.rounds.append(self._t)
+            hist.acc.append(float(eval_fn(self.state["params"])))
+
+
 class SyncSimulator:
-    """Synchronous rounds (FedAvg-family baselines, paper Figure 2)."""
+    """Synchronous rounds (FedAvg-family baselines, paper Figure 2).
+
+    The m sampled clients of a round share the round's params by definition,
+    so fedavg/perfedavg/pfedme rounds run as one cohort-engine call;
+    fedprox/scaffold carry per-client control state and keep the sequential
+    path.  The server apply routes through the fused-update op."""
 
     def __init__(self, *, clients: List[ClientData], loss_fn: Callable,
                  init_params, pcfg: PersAFLConfig, delays: DelayModel,
                  algo: str = "fedavg", clients_per_round: int = 10,
                  batch_size: int = 32, seed: int = 0,
-                 fedprox_mu: float = 0.1):
+                 fedprox_mu: float = 0.1, vectorized: bool = True):
         self.clients = clients
         self.pcfg = pcfg
         self.delays = delays
@@ -141,7 +255,7 @@ class SyncSimulator:
         self.batch_size = batch_size
         self.rng = np.random.RandomState(seed)
         self.loss_fn = loss_fn
-        self.params = init_params
+        self.params = _own_copy(init_params)
         if algo == "scaffold":
             zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                                  init_params)
@@ -152,6 +266,8 @@ class SyncSimulator:
                   "fedprox": "A", "scaffold": "A"}[algo]
         pcfg_local = dataclasses.replace(pcfg, option=option)
         self.pcfg_local = pcfg_local
+        self.engine = CohortEngine(pcfg_local, loss_fn,
+                                   vectorized=vectorized)
 
         if algo == "fedprox":
             self._jit = jax.jit(lambda p, b: fedprox_update(
@@ -161,11 +277,6 @@ class SyncSimulator:
             self._jit = jax.jit(lambda p, b, cg, ci: scaffold_update(
                 pcfg_local, loss_fn, p,
                 jax.tree.map(lambda x: x[:pcfg.q_local], b), cg, ci))
-        else:
-            def _update(params, batches_3q):
-                batches = split_batches_for_option(option, batches_3q)
-                return client_update(pcfg_local, loss_fn, params, batches)
-            self._jit = jax.jit(_update)
 
     def run(self, *, max_rounds: int, eval_every: int = 5,
             eval_fn: Optional[Callable] = None,
@@ -176,21 +287,29 @@ class SyncSimulator:
         next_active_t = 0.0
         for rnd in range(max_rounds):
             sel = self.rng.choice(n, self.m, replace=False)
-            finish, deltas = [], []
+            batches = [sample_batches(self.clients[i], self.rng,
+                                      3 * self.pcfg.q_local, self.batch_size)
+                       for i in sel]
             c_updates = []
-            for i in sel:
-                b = sample_batches(self.clients[i], self.rng,
-                                   3 * self.pcfg.q_local, self.batch_size)
-                if self.algo == "scaffold":
+            if self.algo == "scaffold":
+                deltas = []
+                for i, b in zip(sel, batches):
                     delta, c_new, _ = self._jit(self.params, b,
                                                 self.c_global,
                                                 self.c_clients[i])
                     c_updates.append((i, c_new))
-                else:
-                    delta, _ = self._jit(self.params, b)
-                deltas.append(delta)
-                finish.append(self.delays.sample_download(int(i))
-                              + self.delays.sample_upload(int(i)))
+                    deltas.append(delta)
+                mean_delta = jax.tree.map(lambda *xs: sum(xs) / len(xs),
+                                          *deltas)
+            elif self.algo == "fedprox":
+                deltas = [self._jit(self.params, b)[0] for b in batches]
+                mean_delta = jax.tree.map(lambda *xs: sum(xs) / len(xs),
+                                          *deltas)
+            else:
+                mean_delta = self.engine.update_cohort_mean(self.params,
+                                                            batches)
+            finish = [self.delays.sample_download(int(i))
+                      + self.delays.sample_upload(int(i)) for i in sel]
             round_len = max(finish)
             # active-ratio grid: client i is busy until its own finish time
             while next_active_t <= now + round_len:
@@ -200,12 +319,8 @@ class SyncSimulator:
                 hist.active_ratio.append(busy / n)
                 next_active_t += record_active_every
             now += round_len
-            mean_delta = jax.tree.map(
-                lambda *xs: sum(xs) / len(xs), *deltas)
-            self.params = jax.tree.map(
-                lambda w, d: (w.astype(jnp.float32)
-                              - self.pcfg.beta * d).astype(w.dtype),
-                self.params, mean_delta)
+            self.params = apply_delta_tree(self.params, mean_delta,
+                                           jnp.float32(self.pcfg.beta))
             if self.algo == "scaffold":
                 for i, c_new in c_updates:
                     old = self.c_clients[i]
@@ -218,3 +333,4 @@ class SyncSimulator:
                 hist.rounds.append(rnd + 1)
                 hist.acc.append(float(eval_fn(self.params)))
         return hist
+

@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 64 * 1024  # 256 KiB f32 per operand per step — comfortably VMEM
 
@@ -71,3 +72,36 @@ def prox_inner(theta, g, w, eta_in: float, lam: float, *,
 def prox_outer(w, theta, eta: float, lam: float, *, interpret: bool = True):
     return _run_flat(functools.partial(_prox_outer_kernel, eta=eta, lam=lam),
                      w.dtype, w, theta, interpret=interpret)
+
+
+def _apply_scaled_kernel(w_ref, d_ref, s_ref, o_ref):
+    # s lives in SMEM as a (1, 1) scalar so the scale (β, β/M, or the
+    # staleness-damped β/(1+τ)^a) stays a traced value — one compile
+    # serves every staleness/buffer-count the scheduler produces.
+    s = s_ref[0, 0]
+    w = w_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    o_ref[...] = (w - s * d).astype(o_ref.dtype)
+
+
+def apply_scaled(w, d, scale, *, interpret: bool = True):
+    """Server apply w ← w − s·Δ in one read-modify-write pass."""
+    flat_w, flat_d = w.reshape(-1), d.reshape(-1)
+    n = flat_w.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat_w = jnp.pad(flat_w, (0, pad))
+        flat_d = jnp.pad(flat_d, (0, pad))
+    total = n + pad
+    s = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _apply_scaled_kernel,
+        grid=(total // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,)),
+                  pl.BlockSpec((BLOCK,), lambda i: (i,)),
+                  pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((total,), w.dtype),
+        interpret=interpret,
+    )(flat_w, flat_d, s)
+    return out[:n].reshape(w.shape)

@@ -4,6 +4,7 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.fused_update import kernel as K
 from repro.kernels.fused_update import ref as R
@@ -38,3 +39,31 @@ def prox_outer_tree(w_tree, theta_tree, eta: float, lam: float,
                     mode: str = "auto"):
     fn = _dispatch(K.prox_outer, R.prox_outer_ref, mode)
     return jax.tree.map(lambda w, t: fn(w, t, eta, lam), w_tree, theta_tree)
+
+
+def donate_argnums(*argnums):
+    """Donation is a no-op (plus a warning) off-TPU — only request it where
+    it buys the in-place apply.  Single policy point, resolved lazily so
+    merely importing the callers never initializes the JAX backend."""
+    return argnums if jax.default_backend() == "tpu" else ()
+
+
+@functools.lru_cache(maxsize=None)
+def _apply_delta_jit():
+    @functools.partial(jax.jit, static_argnames=("mode",),
+                       donate_argnums=donate_argnums(0))
+    def apply(w_tree, d_tree, scale, mode: str = "auto"):
+        fn = _dispatch(K.apply_scaled, R.apply_scaled_ref, mode)
+        s = jnp.asarray(scale, jnp.float32)
+        return jax.tree.map(lambda w, d: fn(w, d, s), w_tree, d_tree)
+    return apply
+
+
+def apply_delta_tree(w_tree, d_tree, scale, mode: str = "auto"):
+    """Server apply w ← w − s·Δ over a pytree in one fused pass per leaf.
+
+    ``scale`` is traced (β, β/M, or staleness-damped β/(1+τ)^a), so one
+    compile serves every staleness value and buffer count; the params tree
+    is donated so on TPU the apply is an in-place read-modify-write.
+    """
+    return _apply_delta_jit()(w_tree, d_tree, scale, mode=mode)

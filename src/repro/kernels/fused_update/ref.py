@@ -3,8 +3,10 @@
 Option A step:   w ← w − η g
 Option C inner:  θ ← θ − η_in (g + λ(θ − w))
 Option C outer:  w ← w − η λ (w − θ)
+Server apply:    w ← w − s Δ   (s a *traced* scalar: β, β/M, or the
+                 staleness-damped β/(1+τ)^a — no recompile per staleness)
 
-All three are memory-bound elementwise chains over multi-GB parameter
+All of these are memory-bound elementwise chains over multi-GB parameter
 tensors on the assigned architectures; the kernel fuses each into a single
 HBM round-trip (DESIGN.md §6).
 """
@@ -27,3 +29,9 @@ def prox_inner_ref(theta, g, w, eta_in: float, lam: float):
 def prox_outer_ref(w, theta, eta: float, lam: float):
     w32 = w.astype(jnp.float32)
     return (w32 - eta * lam * (w32 - theta.astype(jnp.float32))).astype(w.dtype)
+
+
+def apply_scaled_ref(w, d, scale):
+    """Server apply w ← w − s·Δ; ``scale`` may be a traced jnp scalar."""
+    s = jnp.asarray(scale, jnp.float32)
+    return (w.astype(jnp.float32) - s * d.astype(jnp.float32)).astype(w.dtype)

@@ -30,6 +30,24 @@ from repro.core import PersAFLConfig, client_update
 from repro.models import api
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs, manual_axes):
+    """Version-portable shard_map, Manual only over ``manual_axes``.
+
+    Newer jax exposes ``jax.shard_map(axis_names=..., check_vma=...)``;
+    0.4.x spells it ``jax.experimental.shard_map.shard_map(auto=...,
+    check_rep=...)`` with the complement axis set.
+    """
+    manual = frozenset(manual_axes)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=manual,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - manual
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)
+
+
 def microbatched(loss_fn: Callable, n_mb: int) -> Callable:
     """grad(microbatched(loss)) == grad-accumulation over n_mb slices with
     one-microbatch activation memory (each slice is remat'd)."""
@@ -127,7 +145,7 @@ def make_cohort_train_step(cfg: ArchConfig, pcfg: PersAFLConfig, mesh,
     def train_step(server_params, stale_params, batch):
         batch_spec = jax.tree.map(
             lambda _: P(d_axes if len(d_axes) > 1 else d_axes[0]), batch)
-        return jax.shard_map(
+        return _shard_map(
             _local_round,
             mesh=mesh,
             in_specs=(specs_like(server_params, P()),
@@ -137,8 +155,7 @@ def make_cohort_train_step(cfg: ArchConfig, pcfg: PersAFLConfig, mesh,
                         "nu_mean": P()}),
             # manual only over the cohort axes — the model axis stays Auto,
             # so tensor parallelism keeps working INSIDE each cohort member
-            axis_names=frozenset(d_axes),
-            check_vma=False,  # scan carries start unvarying; pmean at end
+            manual_axes=d_axes,
         )(server_params, stale_params, batch)
 
     return train_step

@@ -49,8 +49,14 @@ def _guard(spec_parts, shape, sizes) -> P:
     """Replace indivisible entries with None."""
     out = []
     for dim, axes in zip(shape, spec_parts):
-        out.append(axes if axes is not None and _fits(dim, axes, sizes)
-                   else None)
+        if axes is None or not _fits(dim, axes, sizes):
+            out.append(None)
+            continue
+        # collapse 1-tuples to the bare axis name so specs read "data",
+        # not ("data",) — identical sharding, friendlier introspection
+        if isinstance(axes, tuple) and len(axes) == 1:
+            axes = axes[0]
+        out.append(axes)
     return P(*out)
 
 

@@ -140,6 +140,29 @@ def test_buffered_apply_matches_mean_of_singles():
     assert int(s_buf["t"]) == 2
 
 
+def test_buffered_apply_accounts_staleness_sum():
+    """Regression: t advances by M per flush, so the buffer's Σ τ must enter
+    staleness_sum or mean_staleness under-reports for buffered runs."""
+    state = init_server_state({"w": jnp.zeros(4)})
+    state = apply_buffered(state, {"w": jnp.ones(4)}, jnp.asarray(3),
+                           beta=1.0, staleness_max=4, staleness_sum=2 + 4 + 0)
+    state = apply_buffered(state, {"w": jnp.ones(4)}, jnp.asarray(3),
+                           beta=1.0, staleness_max=2, staleness_sum=1 + 2 + 0)
+    stats = staleness_stats(state)
+    assert int(stats["server_rounds"]) == 6
+    assert int(stats["max_staleness"]) == 4
+    assert float(stats["mean_staleness"]) == pytest.approx(9 / 6)
+
+
+def test_apply_update_staleness_damping():
+    """a>0 discounts the server step by (1+tau)^-a (FedAsync-style)."""
+    state = init_server_state({"w": jnp.zeros(2)})
+    state = apply_update(state, {"w": jnp.ones(2)}, beta=1.0, staleness=3,
+                         damping=1.0)
+    np.testing.assert_allclose(np.asarray(state["params"]["w"]), -0.25,
+                               rtol=1e-6)
+
+
 def test_split_batches_layout():
     b3q = {"x": jnp.arange(12).reshape(6, 2)}
     a = split_batches_for_option("A", b3q)

@@ -1,0 +1,221 @@
+"""Cohort-engine and scheduler tests: the vmapped cohort path is a
+performance transform, not a semantics change — pinned against the
+sequential per-client loop for all three options, plus determinism of the
+event-driven runs and the DelayModel's §5 statistics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import MNIST_CNN
+from repro.core import PersAFLConfig, client_update, split_batches_for_option
+from repro.data import make_federated_dataset
+from repro.fl import (AsyncSimulator, BufferedAsyncSimulator, CohortEngine,
+                      DelayModel, SyncSimulator)
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+
+
+def quad_loss(w, batch):
+    r = batch["a"] @ w["w"] - batch["y"]
+    return 0.5 * jnp.mean(r ** 2)
+
+
+def _client_batches(seed, q3=6, m=8, d=5):
+    rng = np.random.RandomState(seed)
+    return {"a": jnp.asarray(rng.randn(q3, m, d).astype(np.float32)),
+            "y": jnp.asarray(rng.randn(q3, m).astype(np.float32))}
+
+
+# ---------------------------------------------------------------------------
+# cohort equivalence: vmapped == sequential, options A/B/C
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("option", ["A", "B", "C"])
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_cohort_matches_sequential(option, k):
+    pcfg = PersAFLConfig(option=option, q_local=2, eta=0.05, alpha=0.05,
+                         lam=20.0, inner_steps=5, inner_eta=0.02,
+                         maml_mode="full")
+    params = {"w": jnp.arange(1.0, 6.0) * 0.1}
+    batch_list = [_client_batches(seed) for seed in range(k)]
+
+    engine = CohortEngine(pcfg, quad_loss, vectorized=True)
+    got = engine.update_cohort(params, batch_list)
+
+    for b3q, delta in zip(batch_list, got):
+        ref, _ = client_update(pcfg, quad_loss, params,
+                               split_batches_for_option(option, b3q))
+        np.testing.assert_allclose(np.asarray(delta["w"]),
+                                   np.asarray(ref["w"]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_cohort_mean_masks_padding():
+    """Bucket padding (k=3 -> bucket 4) must not leak into the mean."""
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.05)
+    params = {"w": jnp.zeros(5)}
+    batch_list = [_client_batches(seed) for seed in range(3)]
+    engine = CohortEngine(pcfg, quad_loss, vectorized=True)
+    mean = engine.update_cohort_mean(params, batch_list)
+    deltas = engine.update_cohort(params, batch_list)
+    ref = jax.tree.map(lambda *xs: sum(xs) / len(xs), *deltas)
+    np.testing.assert_allclose(np.asarray(mean["w"]), np.asarray(ref["w"]),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_cohort_bucketing_bounds_compiles():
+    assert [CohortEngine._bucket(k) for k in (1, 2, 3, 5, 8, 9)] \
+        == [1, 2, 4, 8, 8, 16]
+
+
+# ---------------------------------------------------------------------------
+# simulators on the real (synthetic-MNIST) federated setup
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fed_small():
+    clients = make_federated_dataset("mnist", n_clients=5,
+                                     classes_per_client=3, seed=0)
+    params = init_cnn(MNIST_CNN, jax.random.PRNGKey(0))
+    loss = lambda p, b: cnn_loss(MNIST_CNN, p, b, train=False)
+    return clients, params, loss
+
+
+def _run_async(fed, *, vectorized, rounds=15, seed=0):
+    clients, params, loss = fed
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02)
+    sim = AsyncSimulator(clients=clients, loss_fn=loss, init_params=params,
+                         pcfg=pcfg, delays=DelayModel(len(clients), seed=1),
+                         batch_size=8, seed=seed, vectorized=vectorized)
+    hist = sim.run(max_server_rounds=rounds)
+    return sim, hist
+
+
+def test_async_vectorized_matches_sequential_trace(fed_small):
+    """Same seeds => the engine path replays the per-event path's History
+    and reaches the same final params (up to vmap fp reassociation)."""
+    sim_v, h_v = _run_async(fed_small, vectorized=True)
+    sim_s, h_s = _run_async(fed_small, vectorized=False)
+    assert h_v.staleness == h_s.staleness
+    np.testing.assert_allclose(h_v.active_ratio, h_s.active_ratio)
+    np.testing.assert_allclose(h_v.times, h_s.times)
+    for a, b in zip(jax.tree.leaves(sim_v.state["params"]),
+                    jax.tree.leaves(sim_s.state["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_async_run_is_deterministic(fed_small):
+    """Two runs with the same seed yield an identical History."""
+    _, h1 = _run_async(fed_small, vectorized=True)
+    _, h2 = _run_async(fed_small, vectorized=True)
+    d1, d2 = h1.as_dict(), h2.as_dict()
+    assert d1.keys() == d2.keys()
+    for key in d1:
+        np.testing.assert_array_equal(np.asarray(d1[key]),
+                                      np.asarray(d2[key]), err_msg=key)
+
+
+def test_buffered_async_end_to_end(fed_small):
+    clients, params, loss = fed_small
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02, buffer_size=4)
+    sim = BufferedAsyncSimulator(clients=clients, loss_fn=loss,
+                                 init_params=params, pcfg=pcfg,
+                                 delays=DelayModel(len(clients), seed=1),
+                                 batch_size=8, seed=0)
+    hist = sim.run(max_server_rounds=16)
+    t = int(sim.final_stats["server_rounds"])
+    assert t >= 16 and t % 4 == 0           # advances M per flush
+    assert len(hist.staleness) == t         # every contributing delta counted
+    # the accounting fix: buffered runs report a real mean staleness
+    assert float(sim.final_stats["mean_staleness"]) == pytest.approx(
+        sum(hist.staleness) / t)
+    assert all(s >= 0 for s in hist.staleness)
+    for leaf in jax.tree.leaves(sim.state["params"]):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_buffered_m1_matches_immediate_async(fed_small):
+    """M=1 buffered == paper-faithful immediate apply (same trace)."""
+    clients, params, loss = fed_small
+    kw = dict(clients=clients, loss_fn=loss, init_params=params,
+              delays=DelayModel(len(clients), seed=1), batch_size=8, seed=0)
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02)
+    h_a = AsyncSimulator(pcfg=pcfg, **kw).run(max_server_rounds=10)
+    kw["delays"] = DelayModel(len(clients), seed=1)
+    h_b = BufferedAsyncSimulator(
+        pcfg=dataclasses.replace(pcfg, buffer_size=1), **kw).run(
+            max_server_rounds=10)
+    assert h_a.staleness == h_b.staleness
+    np.testing.assert_allclose(h_a.active_times, h_b.active_times)
+
+
+def test_buffered_staleness_damping_discounts_stale_deltas(fed_small):
+    """staleness_damping must act on the buffered path too (per-delta)."""
+    clients, params, loss = fed_small
+    kw = dict(clients=clients, loss_fn=loss, init_params=params,
+              batch_size=8, seed=0)
+    runs = {}
+    for a in (0.0, 2.0):
+        pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02, buffer_size=4,
+                             staleness_damping=a)
+        sim = BufferedAsyncSimulator(pcfg=pcfg, **kw,
+                                     delays=DelayModel(len(clients), seed=1))
+        sim.run(max_server_rounds=8)
+        runs[a] = sim.state["params"]
+    p0 = jax.tree.leaves(params)
+    moved = lambda p: sum(float(jnp.sum((a - b) ** 2))  # noqa: E731
+                          for a, b in zip(jax.tree.leaves(p), p0))
+    # damped applies discount stale deltas => strictly smaller server moves
+    assert 0 < moved(runs[2.0]) < moved(runs[0.0])
+
+
+def test_sync_cohort_path_runs(fed_small):
+    clients, params, loss = fed_small
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.01)
+    sim = SyncSimulator(clients=clients, loss_fn=loss, init_params=params,
+                        pcfg=pcfg, delays=DelayModel(len(clients)),
+                        algo="fedavg", clients_per_round=3, batch_size=8,
+                        seed=0)
+    sim.run(max_rounds=3)
+    assert sim.engine.stats["cohort_calls"] == 3
+    assert sim.engine.stats["max_cohort"] == 3
+
+
+# ---------------------------------------------------------------------------
+# DelayModel (paper §5 statistics)
+# ---------------------------------------------------------------------------
+
+def test_delay_upload_mean_4_to_6x_download():
+    dm = DelayModel(n_clients=40, seed=7)
+    n_draws = 400
+    for i in range(0, 40, 13):
+        downs = np.array([dm.sample_download(i) for _ in range(n_draws)])
+        ups = np.array([dm.sample_upload(i) for _ in range(n_draws)])
+        ratio = ups.mean() / downs.mean()
+        assert 3.5 < ratio < 6.5, (i, ratio)   # 4-6x up to jitter noise
+
+
+def test_delay_scale_multiplies_both():
+    base = DelayModel(n_clients=6, seed=3)
+    scaled = DelayModel(n_clients=6, seed=3, scale=2.5)
+    # same seed => identical jitter streams => exact 2.5x, draw by draw
+    for i in range(6):
+        np.testing.assert_allclose(scaled.sample_download(i),
+                                   2.5 * base.sample_download(i), rtol=1e-12)
+        np.testing.assert_allclose(scaled.sample_upload(i),
+                                   2.5 * base.sample_upload(i), rtol=1e-12)
+
+
+def test_delay_streams_reproducible():
+    a = DelayModel(n_clients=4, seed=11)
+    b = DelayModel(n_clients=4, seed=11)
+    seq_a = [a.sample_download(i % 4) for i in range(20)] \
+        + [a.sample_upload(i % 4) for i in range(20)]
+    seq_b = [b.sample_download(i % 4) for i in range(20)] \
+        + [b.sample_upload(i % 4) for i in range(20)]
+    assert seq_a == seq_b
+    c = DelayModel(n_clients=4, seed=12)
+    assert [c.sample_download(i % 4) for i in range(20)] != seq_a[:20]

@@ -160,3 +160,33 @@ def test_fused_update_tree_ops():
     out = ops.sgd_step_tree(tree, g, 0.5, mode="ref")
     np.testing.assert_allclose(np.asarray(out["a"]), 0.5)
     np.testing.assert_allclose(np.asarray(out["b"]["c"]), 1.5)
+
+
+@pytest.mark.parametrize("shape", [(17,), (1000, 257), (3, 5, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_apply_scaled(shape, dtype):
+    """The server-apply kernel (traced scale in SMEM) vs the jnp oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    w = jax.random.normal(ks[0], shape, dtype)
+    d = jax.random.normal(ks[1], shape, dtype)
+    out = FK.apply_scaled(w, d, 0.37)
+    ref = FR.apply_scaled_ref(w, d, 0.37)
+    assert out.dtype == w.dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+    # the scale must stay traced — one compile serves every staleness value
+    jit_apply = jax.jit(FK.apply_scaled)
+    out2 = jit_apply(w, d, jnp.float32(1.8))
+    ref2 = FR.apply_scaled_ref(w, d, 1.8)
+    np.testing.assert_allclose(np.asarray(out2, np.float32),
+                               np.asarray(ref2, np.float32), atol=5 * tol)
+
+
+def test_fused_apply_delta_tree_matches_manual():
+    from repro.kernels.fused_update import ops
+    tree = {"a": jnp.ones((64,)), "b": {"c": jnp.full((8, 8), 2.0)}}
+    d = jax.tree.map(jnp.ones_like, tree)
+    out = ops.apply_delta_tree(tree, d, 0.25)
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.75)
+    np.testing.assert_allclose(np.asarray(out["b"]["c"]), 1.75)

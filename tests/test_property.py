@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+# no reason= kwarg: that importorskip parameter needs pytest>=8.2, and the
+# dev floor is 7.0 — hypothesis itself comes from requirements-dev.txt
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (PersAFLConfig, apply_update, client_update,
                         init_server_state, solve_prox)
