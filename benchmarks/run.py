@@ -7,7 +7,10 @@
   table1_staleness    — FedAsync convergence vs maximum delay τ (Table 1's
                         O(1/√T)+O(τ²/T) staleness term, empirically)
   engine              — vectorized cohort engine vs per-event dispatch,
-                        32-client buffered-async run (wall-clock speedup)
+                        32-client buffered-async run (wall-clock speedup,
+                        plus padding_waste / host_materializations stats)
+  engine_sharded      — shard_map cohort split over 8 forced host devices
+                        vs single-device vmap, equality at cohort ≥ 32
   kernels             — Pallas kernels (interpret) vs jnp oracle, µs/call
 
 Prints ``name,us_per_call,derived`` CSV lines (plus per-figure CSV blocks).
@@ -20,6 +23,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -166,7 +171,8 @@ def engine():
             sim.rng = np.random.RandomState(0)
             sim.delays = DelayModel(len(clients), seed=1)
             sim.state = init_server_state(jax.tree.map(jnp.array, params))
-            sim.engine.stats.update(cohort_calls=0, clients=0, max_cohort=0)
+            sim.engine.stats.update(cohort_calls=0, clients=0, max_cohort=0,
+                                    padding_waste=0, host_materializations=0)
 
         reset()
         sim.run(max_server_rounds=rounds)          # warm-up: compiles
@@ -182,13 +188,104 @@ def engine():
         path = "vectorized" if vectorized else "per_event"
         print(f"engine,{path},wall_s={walls[vectorized]:.3f},"
               f"cohort_calls={stats['cohort_calls']},"
-              f"max_cohort={stats['max_cohort']}", flush=True)
+              f"max_cohort={stats['max_cohort']},"
+              f"padding_waste={stats['padding_waste']},"
+              f"host_materializations={stats['host_materializations']}",
+              flush=True)
     speedup = walls[False] / walls[True]
     print(f"engine,{walls[True] / calls[True] * 1e6:.0f},"
           f"speedup={speedup:.2f}")
     _save("engine", {"wall_vectorized_s": walls[True],
                      "wall_per_event_s": walls[False], "speedup": speedup})
     return speedup
+
+
+def engine_sharded():
+    """8-virtual-device CPU shard_map cohort vs single-device vmap.
+
+    The acceptance row: the sharded path must complete a cohort ≥ 32 run
+    with deltas equal to the vmap path (atol ≤ 1e-5).  Needs the forced
+    host-device split BEFORE jax initializes, so when the parent process
+    sees < 8 devices it re-execs itself with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and passes the
+    child's engine_sharded rows through.
+    """
+    if jax.device_count() < 8:
+        if os.environ.get("_ENGINE_SHARDED_CHILD"):
+            raise RuntimeError(
+                "forced 8-device split did not take effect "
+                f"(device_count={jax.device_count()})")
+        env = dict(os.environ)
+        env["JAX_PLATFORMS"] = "cpu"
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=8"
+                            ).strip()
+        env["_ENGINE_SHARDED_CHILD"] = "1"
+        res = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--only",
+             "engine_sharded"],
+            env=env, capture_output=True, text=True)
+        rows = [line for line in res.stdout.splitlines()
+                if line.startswith("engine_sharded,")]
+        for line in rows:
+            print(line, flush=True)
+        if res.returncode != 0 or not rows:
+            sys.stderr.write(res.stderr[-4000:])
+            raise RuntimeError("engine_sharded 8-device child failed")
+        return
+
+    from repro.core import PersAFLConfig
+    from repro.fl import CohortEngine
+
+    d, cohort = 32, 32
+    rng = np.random.RandomState(0)
+
+    def loss(p, b):
+        logits = b["images"] @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.sum(jax.nn.one_hot(b["labels"], 10) * logp, -1))
+
+    pcfg = PersAFLConfig(option="A", q_local=4, eta=0.05)
+    params = {"w": jnp.zeros((d, 10)), "b": jnp.zeros((10,))}
+    batch_list = [{"images": rng.randn(3 * pcfg.q_local, 16, d
+                                       ).astype(np.float32),
+                   "labels": rng.randint(0, 10, (3 * pcfg.q_local, 16)
+                                         ).astype(np.int32)}
+                  for _ in range(cohort)]
+
+    engines = {"vmap": CohortEngine(pcfg, loss, cohort_impl="vmap"),
+               "shard_map": CohortEngine(pcfg, loss,
+                                         cohort_impl="shard_map")}
+    walls, stacks = {}, {}
+    for name, eng in engines.items():
+        bank = eng.update_cohort(params, batch_list)        # warm-up
+        jax.block_until_ready(bank.stacked)
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.time()
+            bank = eng.update_cohort(params, batch_list)
+            jax.block_until_ready(bank.stacked)
+            best = min(best, time.time() - t0)
+        walls[name] = best
+        stacks[name] = jax.device_get(bank.stacked)
+        print(f"engine_sharded,{name},wall_s={best:.3f},"
+              f"devices={jax.device_count() if name == 'shard_map' else 1},"
+              f"cohort={cohort},"
+              f"padding_waste={eng.stats['padding_waste']}", flush=True)
+    diff = max(float(np.max(np.abs(a - b))) for a, b in
+               zip(jax.tree.leaves(stacks["vmap"]),
+                   jax.tree.leaves(stacks["shard_map"])))
+    equal = diff <= 1e-5
+    print(f"engine_sharded,{walls['shard_map'] * 1e6:.0f},"
+          f"max_abs_diff={diff:.2e},equal={equal}", flush=True)
+    _save("engine_sharded", {"wall_vmap_s": walls["vmap"],
+                             "wall_shard_map_s": walls["shard_map"],
+                             "devices": jax.device_count(),
+                             "cohort": cohort, "max_abs_diff": diff,
+                             "equal_atol_1e-5": equal})
+    if not equal:   # this row is a gate, not a report — fail the run
+        raise RuntimeError(f"shard_map deltas diverge from vmap: {diff:.2e}")
+    return diff
 
 
 def kernels():
@@ -237,6 +334,7 @@ BENCHES = {
     "fig2c": fig2c_cifar,
     "table1": table1_staleness,
     "engine": engine,
+    "engine_sharded": engine_sharded,
     "kernels": kernels,
 }
 

@@ -24,7 +24,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import PersAFLConfig
-from repro.kernels.fused_update.ops import apply_delta_tree, donate_argnums
+from repro.kernels.fused_update.ops import (apply_delta_tree,
+                                            apply_rows_tree, donate_argnums,
+                                            spans_devices)
 
 
 def init_server_state(params) -> Dict:
@@ -103,6 +105,49 @@ def apply_buffered(state: Dict, delta_sum, count, beta: float,
     """
     return _apply_buffered_jit()(state, delta_sum, count, beta,
                                  staleness_max, staleness_sum)
+
+
+@functools.lru_cache(maxsize=None)
+def _apply_buffered_rows_jit():
+    @functools.partial(jax.jit, static_argnames=("mode",),
+                       donate_argnums=donate_argnums(0))
+    def apply(state, delta_stack, weights, count, staleness_max,
+              staleness_sum, mode: str = "auto"):
+        return {
+            "params": apply_rows_tree(state["params"], delta_stack, weights,
+                                      mode=mode),
+            "t": state["t"] + jnp.asarray(count, jnp.int32),
+            "staleness_sum": state["staleness_sum"]
+            + jnp.asarray(staleness_sum, jnp.float32),
+            "staleness_max": jnp.maximum(state["staleness_max"],
+                                         jnp.asarray(staleness_max,
+                                                     jnp.int32)),
+        }
+    return apply
+
+
+def apply_buffered_rows(state: Dict, delta_stack, weights, count,
+                        staleness_max, staleness_sum=0.0) -> Dict:
+    """Stacked-buffer overload of :func:`apply_buffered`.
+
+    ``delta_stack`` is a DeltaBank buffer — a params-shaped pytree whose
+    leaves carry a leading ``[M]`` cohort axis and never left the device;
+    ``weights`` the ``[M]`` f32 row-weight vector folding β/M, per-delta
+    FedAsync staleness damping ``(1+τ_j)^{-a}`` and padding masks.  The
+    whole flush is one fused read-modify-write pass per leaf
+    (``apply_rows``) instead of M host-side ``tree.map``s; ``count`` is the
+    number of *non-zero-weight* rows, which the version counter advances
+    by.  Weights stay traced, so one compile per bucket size serves every
+    staleness/damping composition.  The Pallas-vs-oracle dispatch is
+    resolved HERE, on the concrete stack — a cohort-sharded buffer must
+    take the oracle path (per-shard partial sums + one psum), and inside
+    the jit the leaves are tracers that can't reveal their sharding.
+    """
+    mode = "ref" if spans_devices(delta_stack) else "auto"
+    return _apply_buffered_rows_jit()(state, delta_stack,
+                                      jnp.asarray(weights, jnp.float32),
+                                      count, staleness_max, staleness_sum,
+                                      mode=mode)
 
 
 def staleness_stats(state: Dict) -> Dict:

@@ -1,5 +1,5 @@
 from repro.fl.delays import DelayModel                       # noqa: F401
-from repro.fl.engine import CohortEngine                      # noqa: F401
+from repro.fl.engine import CohortEngine, DeltaBank           # noqa: F401
 from repro.fl.simulator import (AsyncSimulator,               # noqa: F401
                                 BufferedAsyncSimulator, History,
                                 SyncSimulator)

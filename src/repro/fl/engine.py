@@ -1,4 +1,4 @@
-"""Vectorized cohort execution engine.
+"""Vectorized cohort execution engine with an on-device DeltaBank.
 
 The discrete-event simulators used to dispatch one jitted ``client_update``
 per event — simulating n concurrent clients cost O(n) sequential device
@@ -12,7 +12,8 @@ Architecture (DESIGN.md §2 extension):
   * :class:`CohortEngine` compiles ONE cohort-mapped jitted kernel and
     reuses it for the whole run — ``jax.vmap`` over clients on TPU (SIMD
     batching), ``lax.map`` on CPU (dispatch amortization without XLA-CPU's
-    poor batched-GEMM lowering); see ``cohort_impl``.  Cohorts are padded
+    poor batched-GEMM lowering), or ``shard_map`` splitting the cohort axis
+    over every addressable device; see ``cohort_impl``.  Cohorts are padded
     up to power-of-two buckets so the jit cache stays O(log max_cohort)
     instead of one compile per cohort size.
   * The stacked batch buffer is donated (``donate_argnums``) so XLA may
@@ -26,12 +27,35 @@ Architecture (DESIGN.md §2 extension):
     change (``tests/test_engine.py`` pins the equivalence for options
     A/B/C).
 
+DeltaBank contract:
+
+  * ``update_cohort`` returns a :class:`DeltaBank` — a handle to the
+    stacked ``[bucket, ...]`` per-client delta buffer that STAYS ON DEVICE.
+    The bank owns the buffer; the engine never touches it again after
+    returning it, and the caller keeps it alive for exactly as long as any
+    of its rows is still unapplied (the buffered scheduler holds banks
+    across flush windows for in-flight clients).
+  * Bulk consumers (buffered/sync applies) read ``bank.stacked`` and reduce
+    it on device through ``kernels/fused_update.apply_rows_tree`` with a
+    per-row weight vector — β/M, staleness damping and padding masks are
+    all rows of one ``[bucket]`` array, so no per-client delta ever crosses
+    to the host (``stats["host_materializations"]`` counts the banks that
+    did; a buffered run keeps it at 0).
+  * Row consumers (the paper-faithful immediate apply) call ``bank.row(i)``
+    /iterate the bank: the FIRST access performs one device→host transfer
+    of the whole stack, after which every row is a free numpy view — the
+    same single round-trip the pre-bank engine paid, now lazy.
+  * In ``cohort_impl="shard_map"`` the buffer is sharded over the cohort
+    mesh axis; ``row()`` gathers (host materialization), while
+    ``apply_rows_tree``/``update_cohort_mean`` reduce it with a single
+    on-device psum.
+
 The per-event sequential path is kept behind ``vectorized=False`` as the
 baseline the ``engine`` benchmark row measures against.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +64,7 @@ import numpy as np
 from repro.core import client_update, split_batches_for_option
 from repro.core.types import PersAFLConfig
 from repro.kernels.fused_update.ops import donate_argnums
+from repro.sharding.ctx import shard_map_compat
 
 
 def _stack(batch_list: List):
@@ -52,6 +77,69 @@ def _stack(batch_list: List):
            for leaf in jax.tree.leaves(batch_list[0])):
         return jax.tree.map(lambda *xs: np.stack(xs), *batch_list)
     return jax.tree.map(lambda *xs: jnp.stack(xs), *batch_list)
+
+
+class DeltaBank:
+    """Handle to a stacked ``[capacity, ...]`` per-client delta buffer.
+
+    ``stacked`` is the on-device buffer (rows ≥ ``k`` are bucket padding);
+    rows cross to the host only through :meth:`row` — one transfer of the
+    whole stack on first access, numpy views afterwards.  Iterating yields
+    the ``k`` real rows in cohort order.
+    """
+
+    def __init__(self, stacked=None, k: int = 0,
+                 stats: Optional[Dict] = None, rows: Optional[List] = None):
+        self._stacked = stacked
+        self._rows = rows          # per-event path: one delta tree per row
+        self.k = k if rows is None else len(rows)
+        self._stats = stats if stats is not None else {}
+        self._host = None
+
+    @property
+    def capacity(self) -> int:
+        if self._rows is not None:
+            return self.k
+        tree = self._stacked if self._stacked is not None else self._host
+        return jax.tree.leaves(tree)[0].shape[0]
+
+    @property
+    def stacked(self):
+        """The ``[capacity, ...]`` device buffer (stacks lazily when the
+        bank was built from per-event row deltas; re-uploads if host
+        materialization already released the device copy)."""
+        if self._stacked is None:
+            if self._rows is not None:
+                self._stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                             *self._rows)
+            else:
+                self._stacked = jax.device_put(self._host)
+        return self._stacked
+
+    def row(self, i: int):
+        """Materialize row ``i`` on the host (lazy, whole-stack-at-once)."""
+        if self._rows is not None:
+            return self._rows[i]
+        if self._host is None:
+            self._stats["host_materializations"] = \
+                self._stats.get("host_materializations", 0) + 1
+            self._host = jax.device_get(self._stacked)
+            # release the device buffer — rows serve from host views now,
+            # and holding both copies would double delta residency exactly
+            # where the bank was meant to shrink it
+            self._stacked = None
+        return jax.tree.map(lambda x: x[i], self._host)
+
+    def __len__(self) -> int:
+        return self.k
+
+    def __getitem__(self, i: int):
+        if not -self.k <= i < self.k:
+            raise IndexError(i)
+        return self.row(i % self.k)
+
+    def __iter__(self):
+        return (self.row(i) for i in range(self.k))
 
 
 class CohortEngine:
@@ -69,7 +157,13 @@ class CohortEngine:
         amortized over the cohort, but per-client compute stays sequential
         — XLA-CPU lowers batched GEMMs poorly, so vmap can *lose* to
         per-event dispatch there).
-    Both are the same math; ``"auto"`` selects by backend.
+      * ``"shard_map"`` — the cohort axis is split over every addressable
+        device of a 1-D ``("cohort",)`` mesh (8-way forced-host-device CPU
+        and TPU pods alike); params are replicated, each shard lax.maps its
+        local rows, and the delta buffer comes back sharded over the mesh —
+        it never gathers unless a row is materialized.  Buckets round up to
+        a device-count multiple.
+    All are the same math; ``"auto"`` selects vmap/map by backend.
     """
 
     def __init__(self, pcfg: PersAFLConfig, loss_fn: Callable, *,
@@ -81,7 +175,8 @@ class CohortEngine:
             cohort_impl = "vmap" if jax.default_backend() == "tpu" else "map"
         self.cohort_impl = cohort_impl
         self.stats: Dict[str, int] = {"cohort_calls": 0, "clients": 0,
-                                      "max_cohort": 0}
+                                      "max_cohort": 0, "padding_waste": 0,
+                                      "host_materializations": 0}
 
         def _one(params, batches_3q):
             batches = split_batches_for_option(pcfg.option, batches_3q)
@@ -91,6 +186,8 @@ class CohortEngine:
             return delta
 
         self._jit_one = jax.jit(_one)
+        self._ndev = 1
+        self._jit_cohort_sum = None
         donate = donate_argnums(1)
         if cohort_impl == "vmap":
             cohort_fn = lambda params, stacked: jax.vmap(  # noqa: E731
@@ -98,59 +195,109 @@ class CohortEngine:
         elif cohort_impl == "map":
             cohort_fn = lambda params, stacked: jax.lax.map(  # noqa: E731
                 lambda b: _one(params, b), stacked)
+        elif cohort_impl == "shard_map":
+            from jax.sharding import Mesh
+            from jax.sharding import PartitionSpec as P
+            devices = np.asarray(jax.devices())
+            self._mesh = Mesh(devices, ("cohort",))
+            self._ndev = devices.size
+
+            def _shard_body(params, stacked):
+                return jax.lax.map(lambda b: _one(params, b), stacked)
+
+            def cohort_fn(params, stacked):
+                return shard_map_compat(
+                    _shard_body, mesh=self._mesh,
+                    in_specs=(jax.tree.map(lambda _: P(), params),
+                              jax.tree.map(lambda _: P("cohort"), stacked)),
+                    out_specs=jax.tree.map(lambda _: P("cohort"), params),
+                    manual_axes=("cohort",))(params, stacked)
+
+            def _sum_body(params, stacked, mask):
+                deltas = jax.lax.map(lambda b: _one(params, b), stacked)
+                local = jax.tree.map(
+                    lambda d: jnp.tensordot(mask, d.astype(jnp.float32),
+                                            axes=(0, 0)), deltas)
+                # the whole cohort reduction is this ONE psum per leaf
+                return jax.tree.map(lambda x: jax.lax.psum(x, "cohort"),
+                                    local)
+
+            def sum_fn(params, stacked, mask):
+                return shard_map_compat(
+                    _sum_body, mesh=self._mesh,
+                    in_specs=(jax.tree.map(lambda _: P(), params),
+                              jax.tree.map(lambda _: P("cohort"), stacked),
+                              P("cohort")),
+                    out_specs=jax.tree.map(lambda _: P(), params),
+                    manual_axes=("cohort",))(params, stacked, mask)
+
+            self._jit_cohort_sum = jax.jit(sum_fn,
+                                           donate_argnums=donate)
         else:
             raise ValueError(f"unknown cohort_impl {cohort_impl!r}")
         self._jit_cohort = jax.jit(cohort_fn, donate_argnums=donate)
 
-    @staticmethod
-    def _bucket(k: int) -> int:
-        return 1 << max(k - 1, 0).bit_length()
+    def _bucket(self, k: int) -> int:
+        """Pow2 bucket, rounded up to a device-count multiple when the
+        cohort axis is sharded (every shard gets equal rows)."""
+        pow2 = 1 << max(k - 1, 0).bit_length()
+        if self._ndev > 1:
+            per_dev = -(-k // self._ndev)
+            return self._ndev * (1 << max(per_dev - 1, 0).bit_length())
+        return pow2
 
-    def _stacked_call(self, params, batch_list: List):
-        """Pad to the bucket size, record stats, run the jitted cohort."""
+    def _pad_stack(self, batch_list: List):
+        """Pad to the bucket size, record stats, stack host-side."""
         k = len(batch_list)
+        bucket = self._bucket(k)
         self.stats["cohort_calls"] += 1
         self.stats["clients"] += k
         self.stats["max_cohort"] = max(self.stats["max_cohort"], k)
-        padded = list(batch_list) + [batch_list[-1]] * (self._bucket(k) - k)
-        return self._jit_cohort(params, _stack(padded))
+        self.stats["padding_waste"] += bucket - k
+        padded = list(batch_list) + [batch_list[-1]] * (bucket - k)
+        return _stack(padded), k, bucket
 
-    def update_cohort(self, params, batch_list: List) -> List:
+    def update_cohort(self, params, batch_list: List) -> DeltaBank:
         """Run ``client_update`` for every client in the cohort.
 
         ``batch_list``: one 3Q-leading-dim batch pytree per client (the raw
-        ``sample_batches`` output).  Returns the per-client delta pytrees in
-        the same order.  All clients are computed against the same
-        ``params`` — the caller guarantees no server apply happened inside
-        the cohort's window.
+        ``sample_batches`` output).  Returns a :class:`DeltaBank` over the
+        per-client deltas in the same order — the stacked buffer stays on
+        device; iterate / ``row(i)`` for host materialization.  All clients
+        are computed against the same ``params`` — the caller guarantees no
+        server apply happened inside the cohort's window.
         """
         k = len(batch_list)
         if k == 0:
-            return []
+            return DeltaBank(rows=[], stats=self.stats)
         if not self.vectorized:
             self.stats["cohort_calls"] += 1
             self.stats["clients"] += k
             self.stats["max_cohort"] = max(self.stats["max_cohort"], k)
-            return [self._jit_one(params, b) for b in batch_list]
-        deltas = self._stacked_call(params, batch_list)
-        # one device->host transfer, then k free numpy views: unstacking on
-        # device would cost k×leaves slice dispatches — more than the
-        # cohort call itself for small models.  (Keeping applies entirely
-        # on-device from the stacked buffer is the multi-device follow-up —
-        # see ROADMAP open items.)
-        host = jax.device_get(deltas)
-        return [jax.tree.map(lambda x: x[i], host) for i in range(k)]
+            return DeltaBank(rows=[self._jit_one(params, b)
+                                   for b in batch_list], stats=self.stats)
+        stacked, k, _ = self._pad_stack(batch_list)
+        return DeltaBank(stacked=self._jit_cohort(params, stacked), k=k,
+                         stats=self.stats)
 
     def update_cohort_mean(self, params, batch_list: List):
         """Cohort deltas reduced to their mean (sync FedAvg-family rounds).
 
-        Padding clients are masked out of the reduction.
+        Padding clients are masked out of the reduction; in shard_map mode
+        the mask-weighted sum happens inside the sharded region and the
+        cross-device reduction is a single psum per leaf.
         """
         k = len(batch_list)
         if k == 0:
             raise ValueError("cohort mean over an empty batch_list")
         if not self.vectorized:
-            deltas = self.update_cohort(params, batch_list)
+            deltas = list(self.update_cohort(params, batch_list))
             return jax.tree.map(lambda *xs: sum(xs) / k, *deltas)
-        deltas = self._stacked_call(params, batch_list)
+        if self._jit_cohort_sum is not None:
+            stacked, k, bucket = self._pad_stack(batch_list)
+            mask = np.zeros(bucket, np.float32)
+            mask[:k] = 1.0 / k
+            return self._jit_cohort_sum(params, stacked, jnp.asarray(mask))
+        stacked, k, _ = self._pad_stack(batch_list)
+        deltas = self._jit_cohort(params, stacked)
         return jax.tree.map(lambda x: jnp.mean(x[:k], axis=0), deltas)

@@ -19,12 +19,16 @@ Three schedulers:
 
 Execution engine: per-client compute is *deferred*.  A client's batches are
 recorded when its download completes and materialized lazily — in one
-:class:`repro.fl.engine.CohortEngine` vmap-over-clients call — right before
-the next server apply.  Because params only change at applies, every delta
-is computed on exactly the snapshot the per-event path would have used,
-while the device sees one batched call per inter-apply window instead of
-one call per client (the win grows with ``buffer_size``: applies thin out,
-cohorts fatten up).  Server applies route through the fused-update Pallas
+:class:`repro.fl.engine.CohortEngine` cohort call — right before the next
+server apply.  Because params only change at applies, every delta is
+computed on exactly the snapshot the per-event path would have used, while
+the device sees one batched call per inter-apply window instead of one call
+per client (the win grows with ``buffer_size``: applies thin out, cohorts
+fatten up).  Each cohort call yields an on-device
+:class:`repro.fl.engine.DeltaBank`; buffered and sync applies reduce the
+stacked buffer with the fused ``apply_rows`` weight-vector pass (no
+per-client host transfer), while the paper-faithful immediate apply
+materializes single rows lazily and routes through the scalar fused-update
 op (one read-modify-write pass, traced scale).
 
 All schedulers record the active-client ratio over time (paper Figure 2a)
@@ -40,14 +44,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PersAFLConfig, apply_buffered, apply_update,
+from repro.core import (PersAFLConfig, apply_buffered_rows, apply_update,
                         init_server_state)
 from repro.core.server import staleness_stats
 from repro.data.federated import ClientData, sample_batches
 from repro.fl.algorithms import fedprox_update, scaffold_update
 from repro.fl.delays import DelayModel
-from repro.fl.engine import CohortEngine
-from repro.kernels.fused_update.ops import apply_delta_tree
+from repro.fl.engine import CohortEngine, DeltaBank
+from repro.kernels.fused_update.ops import apply_delta_tree, apply_rows_tree
 
 
 @dataclasses.dataclass
@@ -99,7 +103,10 @@ class AsyncSimulator:
                    eval_fn, eval_every: int) -> None:
         """Paper-faithful Algorithm 1: apply the delta the moment it lands."""
         self._flush()
-        delta = self._computed.pop(rid)
+        bank, idx = self._computed.pop(rid)
+        # per-row host materialization keeps exact single-delta semantics
+        # (one transfer of the whole bank, numpy views per row after that)
+        delta = bank.row(idx)
         # _t mirrors state["t"] host-side: reading the device scalar every
         # event would force a sync per event — O(n) stalls per window
         staleness = self._t - version
@@ -118,13 +125,16 @@ class AsyncSimulator:
 
         Called right before any server apply: params have not changed since
         these clients' downloads completed, so the whole cohort shares one
-        snapshot and the vmapped call is exact."""
+        snapshot and the cohort call is exact.  Deltas are recorded as
+        (DeltaBank, row) handles — the stacked buffer stays on device and a
+        bank outlives its window for clients whose upload lands after the
+        next apply."""
         if not self._pending:
             return
-        deltas = self.engine.update_cohort(
+        bank = self.engine.update_cohort(
             self.state["params"], [b for _, b in self._pending])
-        for (rid, _), d in zip(self._pending, deltas):
-            self._computed[rid] = d
+        for idx, (rid, _) in enumerate(self._pending):
+            self._computed[rid] = (bank, idx)
         self._pending = []
 
     def run(self, *, max_server_rounds: int, eval_every: int = 50,
@@ -143,7 +153,7 @@ class AsyncSimulator:
         next_active_t = 0.0
         busy_up = {i: None for i in range(n)}  # upload finish times
         self._pending: List[Tuple[int, Dict]] = []  # (rid, batches)
-        self._computed: Dict[int, Dict] = {}        # rid -> delta
+        self._computed: Dict[int, Tuple] = {}       # rid -> (DeltaBank, row)
         self._t = int(self.state["t"])              # host-side round mirror
         next_rid = 0
 
@@ -182,11 +192,14 @@ class BufferedAsyncSimulator(AsyncSimulator):
     """FedBuff-style buffered asynchronous scheduler (beyond-paper [51,63]).
 
     Arrivals accumulate in a size-M buffer (``pcfg.buffer_size``); when full,
-    every still-pending client update is materialized in ONE cohort call and
-    the buffer is applied as one w ← w − β/M ΣΔ server round.  Between
-    flushes the params are frozen, so cohorts grow to ≳M clients — this is
-    the scheduler the vectorized engine was built for.  Staleness Σ/max are
-    accounted per contributing delta (Assumption 1 bookkeeping).
+    every still-pending client update is computed in ONE cohort call and the
+    buffer is applied as one w ← w − β/M ΣΔ server round, consumed straight
+    from the on-device DeltaBank through ``apply_rows`` — flushes never move
+    per-client deltas to the host (``engine.stats["host_materializations"]``
+    stays 0).  Between flushes the params are frozen, so cohorts grow to ≳M
+    clients — this is the scheduler the vectorized engine was built for.
+    Staleness Σ/max are accounted per contributing delta (Assumption 1
+    bookkeeping).
 
     Note: t advances in M-sized jumps, so a run stops at the first flush
     that reaches ``max_server_rounds`` — the final t is the next multiple
@@ -208,23 +221,34 @@ class BufferedAsyncSimulator(AsyncSimulator):
         self._buffer.append((rid, staleness))
         if len(self._buffer) < self.buffer_size:
             return
-        self._flush()  # materialize buffered AND in-flight pending deltas
-        deltas = [self._computed.pop(r) for r, _ in self._buffer]
-        stales = [s for _, s in self._buffer]
+        self._flush()  # compute buffered AND in-flight pending deltas
+        m = len(self._buffer)
         damping = self.pcfg.staleness_damping
-        if damping:
-            # per-delta FedAsync-style discount BEFORE the mean — a single
-            # post-sum scale could not tell fresh deltas from stale ones
-            deltas = [jax.tree.map(lambda x: x * (1.0 + s) ** (-damping), d)
-                      for d, s in zip(deltas, stales)]
-        delta_sum = jax.tree.map(lambda *xs: sum(xs), *deltas)
+        # group the buffer's rows by owning DeltaBank (in-flight clients
+        # were computed in an earlier window's bank) and consume each bank
+        # on device: β/M and the per-delta FedAsync discount (1+τ)^{-a} —
+        # which must act BEFORE the sum, a post-sum scale could not tell
+        # fresh deltas from stale ones — are rows of ONE weight vector, and
+        # the whole flush is one fused apply_rows pass per bank instead of
+        # M host-side tree.maps.
+        groups: Dict[int, Tuple[DeltaBank, List[Tuple[int, int]]]] = {}
+        for r, s in self._buffer:
+            bank, idx = self._computed.pop(r)
+            groups.setdefault(id(bank), (bank, []))[1].append((idx, s))
         t_old = self._t
-        self.state = apply_buffered(self.state, delta_sum, len(deltas),
-                                    self.pcfg.beta,
-                                    staleness_max=max(stales),
-                                    staleness_sum=float(sum(stales)))
+        for bank, rows in groups.values():
+            weights = np.zeros(bank.capacity, np.float32)
+            for idx, s in rows:
+                w = self.pcfg.beta / m
+                if damping:
+                    w *= (1.0 + s) ** (-damping)
+                weights[idx] = w
+            self.state = apply_buffered_rows(
+                self.state, bank.stacked, weights, len(rows),
+                staleness_max=max(s for _, s in rows),
+                staleness_sum=float(sum(s for _, s in rows)))
         self._buffer = []
-        self._t = t_old + len(deltas)
+        self._t = t_old + m
         # t jumps by M per flush: eval whenever a multiple of eval_every
         # is crossed (the immediate-apply modulo test would skip most)
         if eval_fn is not None \
@@ -306,8 +330,11 @@ class SyncSimulator:
                 mean_delta = jax.tree.map(lambda *xs: sum(xs) / len(xs),
                                           *deltas)
             else:
-                mean_delta = self.engine.update_cohort_mean(self.params,
-                                                            batches)
+                # engine-path rounds consume the DeltaBank on device: the
+                # mean AND the β-scaled apply fuse into one apply_rows pass
+                # (weights = β/m on real rows, 0 on bucket padding)
+                bank = self.engine.update_cohort(self.params, batches)
+                mean_delta = None
             finish = [self.delays.sample_download(int(i))
                       + self.delays.sample_upload(int(i)) for i in sel]
             round_len = max(finish)
@@ -319,8 +346,14 @@ class SyncSimulator:
                 hist.active_ratio.append(busy / n)
                 next_active_t += record_active_every
             now += round_len
-            self.params = apply_delta_tree(self.params, mean_delta,
-                                           jnp.float32(self.pcfg.beta))
+            if mean_delta is not None:
+                self.params = apply_delta_tree(self.params, mean_delta,
+                                               jnp.float32(self.pcfg.beta))
+            else:
+                weights = np.zeros(bank.capacity, np.float32)
+                weights[:len(batches)] = self.pcfg.beta / len(batches)
+                self.params = apply_rows_tree(self.params, bank.stacked,
+                                              weights)
             if self.algo == "scaffold":
                 for i, c_new in c_updates:
                     old = self.c_clients[i]

@@ -84,6 +84,69 @@ def _apply_scaled_kernel(w_ref, d_ref, s_ref, o_ref):
     o_ref[...] = (w - s * d).astype(o_ref.dtype)
 
 
+# apply_rows tiles: ROW_BLOCK×COL_BLOCK f32 delta tiles must fit VMEM next
+# to the w/o blocks — 128×8192×4 = 4 MiB.  Cohort buckets are pow2, so for
+# M ≤ 128 (every realistic cohort) the whole reduction is ONE grid pass per
+# column block and the f32 accumulator never round-trips through the output
+# dtype; beyond that the row-chunk grid dim revisits the output block.
+ROW_BLOCK = 128
+COL_BLOCK = 8192
+
+
+def _apply_rows_kernel(w_ref, d_ref, s_ref, o_ref):
+    # partial reduction over this row chunk: s is [rows, 1] f32 in VMEM so
+    # the weight vector (β/M · damping · padding mask per row) stays traced
+    r = pl.program_id(1)
+    part = jnp.sum(s_ref[...] * d_ref[...].astype(jnp.float32), axis=0)
+
+    @pl.when(r == 0)
+    def _init():
+        o_ref[...] = (w_ref[...].astype(jnp.float32) - part).astype(o_ref.dtype)
+
+    @pl.when(r > 0)
+    def _accum():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) - part).astype(o_ref.dtype)
+
+
+def apply_rows(w, d_stack, weights, *, interpret: bool = True):
+    """Stacked server apply w ← w − Σ_i weights[i]·Δ_i, one fused pass.
+
+    ``d_stack``: ``[M, *w.shape]`` stacked delta buffer (a DeltaBank's
+    device buffer); ``weights``: traced ``[M]`` f32 — β/M, per-row FedAsync
+    staleness damping and padding masks are all just rows of this vector,
+    so one compile serves every buffer composition.  The column grid axis
+    is major and the row-chunk axis minor, so each output block is visited
+    on consecutive iterations (the Pallas revisiting contract).
+    """
+    m = d_stack.shape[0]
+    flat_w = w.reshape(-1)
+    flat_d = d_stack.reshape(m, -1)
+    n = flat_w.shape[0]
+    pad = (-n) % COL_BLOCK
+    if pad:
+        flat_w = jnp.pad(flat_w, (0, pad))
+        flat_d = jnp.pad(flat_d, ((0, 0), (0, pad)))
+    row_blk = min(1 << max(m - 1, 0).bit_length(), ROW_BLOCK)
+    rpad = (-m) % row_blk
+    s = jnp.asarray(weights, jnp.float32).reshape(m, 1)
+    if rpad:  # zero-weight, zero-delta padding rows: contribute nothing
+        flat_d = jnp.pad(flat_d, ((0, rpad), (0, 0)))
+        s = jnp.pad(s, ((0, rpad), (0, 0)))
+    total = n + pad
+    grid = (total // COL_BLOCK, (m + rpad) // row_blk)
+    out = pl.pallas_call(
+        _apply_rows_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((COL_BLOCK,), lambda c, r: (c,)),
+                  pl.BlockSpec((row_blk, COL_BLOCK), lambda c, r: (r, c)),
+                  pl.BlockSpec((row_blk, 1), lambda c, r: (r, 0))],
+        out_specs=pl.BlockSpec((COL_BLOCK,), lambda c, r: (c,)),
+        out_shape=jax.ShapeDtypeStruct((total,), w.dtype),
+        interpret=interpret,
+    )(flat_w, flat_d, s)
+    return out[:n].reshape(w.shape)
+
+
 def apply_scaled(w, d, scale, *, interpret: bool = True):
     """Server apply w ← w − s·Δ in one read-modify-write pass."""
     flat_w, flat_d = w.reshape(-1), d.reshape(-1)

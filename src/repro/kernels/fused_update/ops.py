@@ -67,3 +67,45 @@ def apply_delta_tree(w_tree, d_tree, scale, mode: str = "auto"):
     is donated so on TPU the apply is an in-place read-modify-write.
     """
     return _apply_delta_jit()(w_tree, d_tree, scale, mode=mode)
+
+
+@functools.lru_cache(maxsize=None)
+def _apply_rows_jit():
+    @functools.partial(jax.jit, static_argnames=("mode",),
+                       donate_argnums=donate_argnums(0))
+    def apply(w_tree, stack_tree, weights, mode: str = "auto"):
+        fn = _dispatch(K.apply_rows, R.apply_rows_ref, mode)
+        s = jnp.asarray(weights, jnp.float32)
+        return jax.tree.map(lambda w, d: fn(w, d, s), w_tree, stack_tree)
+    return apply
+
+
+def spans_devices(tree) -> bool:
+    """True when any leaf is a committed array sharded over >1 device.
+    Tracers (inside jit) report False — callers that jit the apply must
+    resolve the dispatch mode on concrete arrays first."""
+    for leaf in jax.tree.leaves(tree):
+        try:
+            sharding = getattr(leaf, "sharding", None)
+        except Exception:
+            continue
+        if sharding is not None and len(sharding.device_set) > 1:
+            return True
+    return False
+
+
+def apply_rows_tree(w_tree, stack_tree, weights, mode: str = "auto"):
+    """Stacked server apply w ← w − Σ_i weights[i]·Δ_i per leaf, fused.
+
+    ``stack_tree`` is a DeltaBank buffer: params-shaped pytree whose leaves
+    carry a leading ``[M]`` cohort axis and never leave the device;
+    ``weights`` is the traced ``[M]`` f32 row-weight vector (β/M, staleness
+    damping, padding masks).  One compile per (bucket, leaf-shape) serves
+    every flush.  A cohort-sharded stack forces the jnp oracle path — XLA
+    SPMD lowers its row reduction to per-shard partial sums plus one psum,
+    whereas the Pallas kernel has no partitioning rule and would gather the
+    whole multi-GB buffer onto every device.
+    """
+    if mode == "auto" and spans_devices(stack_tree):
+        mode = "ref"
+    return _apply_rows_jit()(w_tree, stack_tree, weights, mode=mode)

@@ -35,3 +35,15 @@ def apply_scaled_ref(w, d, scale):
     """Server apply w ← w − s·Δ; ``scale`` may be a traced jnp scalar."""
     s = jnp.asarray(scale, jnp.float32)
     return (w.astype(jnp.float32) - s * d.astype(jnp.float32)).astype(w.dtype)
+
+
+def apply_rows_ref(w, d_stack, weights):
+    """Stacked server apply w ← w − Σ_i s_i·Δ_i in one reduction.
+
+    ``d_stack`` is the on-device DeltaBank buffer ``[M, *w.shape]``;
+    ``weights`` a traced ``[M]`` f32 vector carrying β/M, per-row staleness
+    damping, and padding masks (zero rows contribute nothing).
+    """
+    s = jnp.asarray(weights, jnp.float32).reshape((-1,) + (1,) * w.ndim)
+    acc = jnp.sum(s * d_stack.astype(jnp.float32), axis=0)
+    return (w.astype(jnp.float32) - acc).astype(w.dtype)

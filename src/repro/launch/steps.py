@@ -28,24 +28,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import PersAFLConfig, client_update
 from repro.models import api
-
-
-def _shard_map(f, *, mesh, in_specs, out_specs, manual_axes):
-    """Version-portable shard_map, Manual only over ``manual_axes``.
-
-    Newer jax exposes ``jax.shard_map(axis_names=..., check_vma=...)``;
-    0.4.x spells it ``jax.experimental.shard_map.shard_map(auto=...,
-    check_rep=...)`` with the complement axis set.
-    """
-    manual = frozenset(manual_axes)
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, axis_names=manual,
-                             check_vma=False)
-    from jax.experimental.shard_map import shard_map as _sm
-    auto = frozenset(mesh.axis_names) - manual
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False, auto=auto)
+from repro.sharding.ctx import shard_map_compat as _shard_map
 
 
 def microbatched(loss_fn: Callable, n_mb: int) -> Callable:

@@ -1,1 +1,2 @@
-from repro.sharding.ctx import activation_sharding, shard_activation  # noqa: F401
+from repro.sharding.ctx import (activation_sharding,   # noqa: F401
+                                shard_activation, shard_map_compat)

@@ -1,4 +1,4 @@
-"""Activation-sharding context.
+"""Activation-sharding context + version-portable shard_map.
 
 Models are mesh-agnostic; the launch layer may install a mapping from
 *logical* activation names ("ffn", "attn_out", "moe_dispatch", ...) to
@@ -7,6 +7,10 @@ Models are mesh-agnostic; the launch layer may install a mapping from
 
 This is the hook the §Perf hillclimb uses to steer XLA SPMD without
 touching model code.
+
+:func:`shard_map_compat` is the single jax-version shim for manual-axes
+shard_map, shared by ``launch/steps.py`` (cohort train step) and
+``fl/engine.py`` (``cohort_impl="shard_map"``) — keep exactly one copy.
 """
 from __future__ import annotations
 
@@ -17,6 +21,24 @@ from typing import Dict, Optional
 import jax
 
 _state = threading.local()
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes):
+    """Version-portable shard_map, Manual only over ``manual_axes``.
+
+    Newer jax exposes ``jax.shard_map(axis_names=..., check_vma=...)``;
+    0.4.x spells it ``jax.experimental.shard_map.shard_map(auto=...,
+    check_rep=...)`` with the complement axis set.
+    """
+    manual = frozenset(manual_axes)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=manual,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - manual
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)
 
 
 def _rules() -> Optional[Dict[str, "jax.sharding.PartitionSpec"]]:

@@ -154,6 +154,29 @@ def test_buffered_apply_accounts_staleness_sum():
     assert float(stats["mean_staleness"]) == pytest.approx(9 / 6)
 
 
+def test_apply_buffered_rows_matches_summed_apply():
+    """The stacked-buffer overload == apply_buffered on the summed deltas,
+    with β/M+damping folded into the row weights and padding rows masked."""
+    from repro.core import apply_buffered_rows
+    params = {"w": jnp.zeros(4)}
+    stack = {"w": jnp.stack([jnp.ones(4), 3 * jnp.ones(4),
+                             999.0 * jnp.ones(4)])}   # row 2 = padding
+    weights = jnp.asarray([0.5, 0.5, 0.0])            # β/M with β=1, M=2
+    s_rows = apply_buffered_rows(init_server_state(params), stack, weights,
+                                 jnp.asarray(2), staleness_max=2,
+                                 staleness_sum=3.0)
+    s_ref = apply_buffered(init_server_state(params),
+                           {"w": jnp.ones(4) + 3 * jnp.ones(4)},
+                           jnp.asarray(2), beta=1.0, staleness_max=2,
+                           staleness_sum=3.0)
+    np.testing.assert_allclose(np.asarray(s_rows["params"]["w"]),
+                               np.asarray(s_ref["params"]["w"]), rtol=1e-6)
+    assert int(s_rows["t"]) == int(s_ref["t"]) == 2
+    stats = staleness_stats(s_rows)
+    assert int(stats["max_staleness"]) == 2
+    assert float(stats["mean_staleness"]) == pytest.approx(1.5)
+
+
 def test_apply_update_staleness_damping():
     """a>0 discounts the server step by (1+tau)^-a (FedAsync-style)."""
     state = init_server_state({"w": jnp.zeros(2)})

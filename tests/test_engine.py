@@ -66,8 +66,44 @@ def test_cohort_mean_masks_padding():
 
 
 def test_cohort_bucketing_bounds_compiles():
-    assert [CohortEngine._bucket(k) for k in (1, 2, 3, 5, 8, 9)] \
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.05)
+    engine = CohortEngine(pcfg, quad_loss)
+    assert [engine._bucket(k) for k in (1, 2, 3, 5, 8, 9)] \
         == [1, 2, 4, 8, 8, 16]
+    # sharded cohorts round up to a device-count multiple (equal shards)
+    engine._ndev = 8
+    assert [engine._bucket(k) for k in (1, 8, 9, 17)] == [8, 8, 16, 32]
+
+
+def test_padding_waste_stat_counts_bucket_overhead():
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.05)
+    params = {"w": jnp.zeros(5)}
+    engine = CohortEngine(pcfg, quad_loss, vectorized=True)
+    engine.update_cohort(params, [_client_batches(s) for s in range(3)])
+    assert engine.stats["padding_waste"] == 1     # bucket 4, 3 real rows
+    engine.update_cohort(params, [_client_batches(s) for s in range(5)])
+    assert engine.stats["padding_waste"] == 1 + 3  # bucket 8, 5 real rows
+
+
+def test_delta_bank_lazy_materialization():
+    """The bank's stacked buffer crosses to the host at most once, and only
+    when a row is actually asked for."""
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.05)
+    params = {"w": jnp.zeros(5)}
+    engine = CohortEngine(pcfg, quad_loss, vectorized=True)
+    bank = engine.update_cohort(params, [_client_batches(s) for s in range(3)])
+    assert len(bank) == 3 and bank.capacity == 4
+    assert engine.stats["host_materializations"] == 0
+    rows = list(bank)
+    assert engine.stats["host_materializations"] == 1
+    bank.row(0)
+    assert engine.stats["host_materializations"] == 1  # cached host views
+    assert all(isinstance(r["w"], np.ndarray) for r in rows)
+    # materialization releases the device buffer (no double residency) …
+    assert bank._stacked is None and bank.capacity == 4
+    # … and .stacked transparently re-uploads from the host copy
+    np.testing.assert_allclose(np.asarray(bank.stacked["w"][0]),
+                               np.asarray(rows[0]["w"]))
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +186,77 @@ def test_buffered_m1_matches_immediate_async(fed_small):
             max_server_rounds=10)
     assert h_a.staleness == h_b.staleness
     np.testing.assert_allclose(h_a.active_times, h_b.active_times)
+
+
+def test_buffered_flush_never_transfers_deltas_to_host(fed_small):
+    """Acceptance: buffered applies consume the stacked DeltaBank on device
+    — zero per-client (or per-bank) device→host delta transfers."""
+    clients, params, loss = fed_small
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02, buffer_size=4)
+    sim = BufferedAsyncSimulator(clients=clients, loss_fn=loss,
+                                 init_params=params, pcfg=pcfg,
+                                 delays=DelayModel(len(clients), seed=1),
+                                 batch_size=8, seed=0)
+    sim.run(max_server_rounds=16)
+    assert sim.engine.stats["cohort_calls"] > 0
+    assert sim.engine.stats["host_materializations"] == 0
+
+
+class _LegacyBufferedSim(BufferedAsyncSimulator):
+    """The pre-DeltaBank flush: M host-side damped tree.maps + one summed
+    apply.  Kept only as the numerical-equality oracle for the fused
+    apply_rows weight-vector path."""
+
+    def _on_upload(self, now, rid, version, hist, eval_fn, eval_every):
+        from repro.core import apply_buffered
+        staleness = self._t - version
+        hist.staleness.append(staleness)
+        self._buffer.append((rid, staleness))
+        if len(self._buffer) < self.buffer_size:
+            return
+        self._flush()
+        deltas = []
+        for r, _ in self._buffer:
+            bank, idx = self._computed.pop(r)
+            deltas.append(bank.row(idx))
+        stales = [s for _, s in self._buffer]
+        damping = self.pcfg.staleness_damping
+        if damping:
+            deltas = [jax.tree.map(lambda x: x * (1.0 + s) ** (-damping), d)
+                      for d, s in zip(deltas, stales)]
+        delta_sum = jax.tree.map(lambda *xs: sum(xs), *deltas)
+        t_old = self._t
+        self.state = apply_buffered(self.state, delta_sum, len(deltas),
+                                    self.pcfg.beta,
+                                    staleness_max=max(stales),
+                                    staleness_sum=float(sum(stales)))
+        self._buffer = []
+        self._t = t_old + len(deltas)
+
+
+@pytest.mark.parametrize("damping", [0.0, 1.5])
+def test_buffered_apply_rows_matches_legacy_host_loop(fed_small, damping):
+    """Regression pin: folding β/M + per-delta damping into the apply_rows
+    weight vector reproduces the old host-side loop's numbers."""
+    clients, params, loss = fed_small
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02, buffer_size=4,
+                         staleness_damping=damping)
+    sims = []
+    for cls in (BufferedAsyncSimulator, _LegacyBufferedSim):
+        sim = cls(clients=clients, loss_fn=loss, init_params=params,
+                  pcfg=pcfg, delays=DelayModel(len(clients), seed=1),
+                  batch_size=8, seed=0)
+        sim.run(max_server_rounds=12)
+        sims.append(sim)
+    new, old = sims
+    assert int(new.final_stats["server_rounds"]) \
+        == int(old.final_stats["server_rounds"])
+    assert float(new.final_stats["mean_staleness"]) == pytest.approx(
+        float(old.final_stats["mean_staleness"]))
+    for a, b in zip(jax.tree.leaves(new.state["params"]),
+                    jax.tree.leaves(old.state["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
 
 
 def test_buffered_staleness_damping_discounts_stale_deltas(fed_small):

@@ -190,3 +190,68 @@ def test_fused_apply_delta_tree_matches_manual():
     out = ops.apply_delta_tree(tree, d, 0.25)
     np.testing.assert_allclose(np.asarray(out["a"]), 0.75)
     np.testing.assert_allclose(np.asarray(out["b"]["c"]), 1.75)
+
+
+@pytest.mark.parametrize("m", [1, 4, 32, 300])
+@pytest.mark.parametrize("shape", [(17,), (1000, 257), (3, 5, 7)])
+def test_fused_apply_rows_matches_ref(m, shape):
+    """Stacked DeltaBank apply (row-chunked grid, f32 accumulation) vs the
+    jnp oracle — m=300 exercises the output-revisiting multi-chunk path."""
+    if m == 300 and shape == (1000, 257):
+        pytest.skip("large interpret-mode case, covered by (17,)/(3,5,7)")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    w = jax.random.normal(ks[0], shape)
+    d = jax.random.normal(ks[1], (m,) + shape)
+    s = jax.random.normal(ks[2], (m,))
+    out = FK.apply_rows(w, d, s)
+    ref = FR.apply_rows_ref(w, d, s)
+    assert out.dtype == w.dtype
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_apply_rows_dtypes_and_traced_weights(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    w = jax.random.normal(ks[0], (513,), dtype)
+    d = jax.random.normal(ks[1], (8, 513), dtype)
+    s = jax.random.normal(ks[2], (8,))
+    # weights must stay traced: one compile serves every flush composition
+    out = jax.jit(FK.apply_rows)(w, d, s)
+    ref = FR.apply_rows_ref(w, d, s)
+    assert out.dtype == dtype
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_fused_apply_rows_masked_padding_rows_are_inert():
+    """Zero-weight rows (bucket padding / non-buffered in-flight clients)
+    must not leak into the apply, whatever garbage they hold."""
+    w = jnp.ones((257,))
+    d = jnp.stack([jnp.full((257,), 2.0),
+                   jnp.full((257,), 123.0),   # padding rows: huge values
+                   jnp.full((257,), -999.0)])
+    out = FK.apply_rows(w, d, jnp.asarray([0.5, 0.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+    ref = FR.apply_rows_ref(w, d, jnp.asarray([0.5, 0.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(ref), 0.0, atol=1e-6)
+
+
+def test_apply_rows_tree_matches_per_row_applies():
+    """apply_rows_tree == sequential apply_delta_tree over the same rows."""
+    from repro.kernels.fused_update import ops
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    tree = {"a": jax.random.normal(ks[0], (64,)),
+            "b": {"c": jax.random.normal(ks[1], (8, 8))}}
+    stack = jax.tree.map(
+        lambda x: jax.random.normal(ks[2], (4,) + x.shape), tree)
+    weights = jnp.asarray([0.1, 0.0, 0.3, 0.2])
+    fused = ops.apply_rows_tree(tree, stack, weights)
+    seq = tree
+    for i, wgt in enumerate(np.asarray(weights)):
+        row = jax.tree.map(lambda x: x[i], stack)
+        seq = ops.apply_delta_tree(seq, row, float(wgt))
+    for a, b in zip(jax.tree.leaves(fused), jax.tree.leaves(seq)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)

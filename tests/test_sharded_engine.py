@@ -1,0 +1,162 @@
+"""Sharded cohort execution: ``cohort_impl="shard_map"`` must be a layout
+transform, not a semantics change.
+
+The in-process tests run on however many devices the suite sees (1 on a
+stock CPU runner; 8 in the CI job that sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — the shard_map
+path must agree with the single-device vmap path either way.  The
+subprocess test forces the 8-virtual-device split regardless of the parent
+environment, so the multi-device psum path can't rot on 1-device runners.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PersAFLConfig, apply_buffered_rows, init_server_state
+from repro.fl import BufferedAsyncSimulator, CohortEngine, DelayModel
+from repro.kernels.fused_update.ops import apply_rows_tree
+
+
+def quad_loss(w, batch):
+    r = batch["a"] @ w["w"] - batch["y"]
+    return 0.5 * jnp.mean(r ** 2)
+
+
+def _client_batches(seed, q3=6, m=8, d=5):
+    rng = np.random.RandomState(seed)
+    return {"a": jnp.asarray(rng.randn(q3, m, d).astype(np.float32)),
+            "y": jnp.asarray(rng.randn(q3, m).astype(np.float32))}
+
+
+def _pcfg(option):
+    return PersAFLConfig(option=option, q_local=2, eta=0.05, alpha=0.05,
+                         lam=20.0, inner_steps=5, inner_eta=0.02,
+                         maml_mode="full")
+
+
+@pytest.mark.parametrize("option", ["A", "B", "C"])
+def test_shard_map_cohort_matches_vmap(option):
+    params = {"w": jnp.arange(1.0, 6.0) * 0.1}
+    batch_list = [_client_batches(seed) for seed in range(32)]
+    e_ref = CohortEngine(_pcfg(option), quad_loss, cohort_impl="vmap")
+    e_sh = CohortEngine(_pcfg(option), quad_loss, cohort_impl="shard_map")
+    ref = list(e_ref.update_cohort(params, batch_list))
+    got = list(e_sh.update_cohort(params, batch_list))
+    assert len(got) == 32
+    for r, g in zip(ref, got):
+        np.testing.assert_allclose(np.asarray(g["w"]), np.asarray(r["w"]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_shard_map_mean_single_psum_matches_vmap():
+    """Masked mean inside the sharded region (one psum per leaf) ==
+    unsharded masked mean, non-divisible cohort (padding masked)."""
+    params = {"w": jnp.arange(1.0, 6.0) * 0.1}
+    batch_list = [_client_batches(seed) for seed in range(13)]
+    e_ref = CohortEngine(_pcfg("A"), quad_loss, cohort_impl="vmap")
+    e_sh = CohortEngine(_pcfg("A"), quad_loss, cohort_impl="shard_map")
+    ref = e_ref.update_cohort_mean(params, batch_list)
+    got = e_sh.update_cohort_mean(params, batch_list)
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(ref["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_shard_map_bank_feeds_apply_rows():
+    """A sharded DeltaBank is consumable by the fused stacked apply."""
+    params = {"w": jnp.arange(1.0, 6.0) * 0.1}
+    batch_list = [_client_batches(seed) for seed in range(8)]
+    engine = CohortEngine(_pcfg("A"), quad_loss, cohort_impl="shard_map")
+    bank = engine.update_cohort(params, batch_list)
+    weights = np.zeros(bank.capacity, np.float32)
+    weights[:8] = 1.0 / 8
+    out = apply_rows_tree(params, bank.stacked, weights)
+    rows = list(CohortEngine(_pcfg("A"), quad_loss,
+                             cohort_impl="vmap").update_cohort(params,
+                                                               batch_list))
+    mean = jax.tree.map(lambda *xs: sum(xs) / len(xs), *rows)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(params["w"] - mean["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_shard_map_buffered_simulator_end_to_end():
+    """The buffered scheduler runs unchanged on a sharded engine and still
+    never materializes deltas to the host."""
+    rng = np.random.RandomState(0)
+    from repro.data.federated import ClientData
+    clients = []
+    for _ in range(8):
+        x = rng.randn(64, 5).astype(np.float32)
+        y = rng.randint(0, 4, 64).astype(np.int32)
+        clients.append(ClientData(train_x=x, train_y=y, test_x=x[:8],
+                                  test_y=y[:8], classes=(0, 1, 2, 3)))
+
+    def loss(p, b):
+        logits = b["images"] @ p["w"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.sum(jax.nn.one_hot(b["labels"], 4) * logp, -1))
+
+    params = {"w": jnp.zeros((5, 4))}
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.05, buffer_size=4)
+    sim = BufferedAsyncSimulator(clients=clients, loss_fn=loss,
+                                 init_params=params, pcfg=pcfg,
+                                 delays=DelayModel(len(clients), seed=1),
+                                 batch_size=8, seed=0)
+    sim.engine = CohortEngine(pcfg, loss, cohort_impl="shard_map")
+    sim.run(max_server_rounds=8)
+    assert sim.engine.stats["host_materializations"] == 0
+    assert int(sim.final_stats["server_rounds"]) >= 8
+    for leaf in jax.tree.leaves(sim.state["params"]):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+_SUBPROC = textwrap.dedent("""
+    import jax, numpy as np, jax.numpy as jnp
+    assert jax.device_count() == 8, jax.device_count()
+    from repro.core import PersAFLConfig
+    from repro.fl import CohortEngine
+
+    def quad_loss(w, batch):
+        r = batch["a"] @ w["w"] - batch["y"]
+        return 0.5 * jnp.mean(r ** 2)
+
+    def batches(seed):
+        rng = np.random.RandomState(seed)
+        return {"a": jnp.asarray(rng.randn(6, 8, 5).astype(np.float32)),
+                "y": jnp.asarray(rng.randn(6, 8).astype(np.float32))}
+
+    pcfg = PersAFLConfig(option="A", q_local=2, eta=0.05)
+    params = {"w": jnp.arange(1.0, 6.0) * 0.1}
+    bl = [batches(s) for s in range(32)]
+    e_sh = CohortEngine(pcfg, quad_loss, cohort_impl="shard_map")
+    assert e_sh._ndev == 8
+    bank = e_sh.update_cohort(params, bl)
+    assert bank.capacity == 32 and bank.capacity % 8 == 0
+    ref = list(CohortEngine(pcfg, quad_loss,
+                            cohort_impl="vmap").update_cohort(params, bl))
+    for r, g in zip(ref, bank):
+        np.testing.assert_allclose(np.asarray(g["w"]), np.asarray(r["w"]),
+                                   rtol=1e-5, atol=1e-5)
+    print("SHARDED8-OK")
+""")
+
+
+def test_shard_map_8_virtual_devices_subprocess():
+    """Force an 8-way host-device split and pin shard_map == vmap there."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "SHARDED8-OK" in res.stdout
