@@ -11,6 +11,9 @@
                         plus padding_waste / host_materializations stats)
   engine_sharded      — shard_map cohort split over 8 forced host devices
                         vs single-device vmap, equality at cohort ≥ 32
+  serve               — batched personalization through
+                        PersonalizationServer vs per-request loop at 32
+                        concurrent users (req/s, zero host materializations)
   kernels             — Pallas kernels (interpret) vs jnp oracle, µs/call
 
 Prints ``name,us_per_call,derived`` CSV lines (plus per-figure CSV blocks).
@@ -288,6 +291,92 @@ def engine_sharded():
     return diff
 
 
+def serve():
+    """Batched personalization throughput: PersonalizationServer (one
+    cohort call per micro-batch) vs the pre-subsystem per-request loop
+    (one jitted prox solve dispatch per user), 32 concurrent users.
+
+    This is the serving-side twin of the ``engine`` row: per-user heads
+    are tiny, so the work is dispatch-bound and the per-request loop pays
+    O(users) device round-trips where the server pays one.  Steady state
+    must keep ``host_materializations`` at 0 — heads are served as
+    device-side gathers from the stacked head bank."""
+    from repro.core import PersAFLConfig
+    from repro.core.moreau import personalize_me
+    from repro.serving import PersonalizationServer
+
+    d, users, rounds = 32, 32, 4 if FAST else 8
+    rng = np.random.RandomState(0)
+
+    def loss(p, b):
+        logits = b["images"] @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.sum(jax.nn.one_hot(b["labels"], 10) * logp, -1))
+
+    params = {"w": jnp.zeros((d, 10)), "b": jnp.zeros((10,))}
+    pcfg = PersAFLConfig(option="C", lam=20.0, inner_steps=5,
+                         inner_eta=0.05, beta=0.5)
+    # payloads stay host-side numpy, as a network-facing server holds them:
+    # the micro-batcher stacks them in one memcpy per leaf, while the
+    # per-request loop pays a host→device transfer per dispatch
+    batches = [{"images": rng.randn(16, d).astype(np.float32),
+                "labels": rng.randint(0, 10, 16).astype(np.int32)}
+               for _ in range(users)]
+
+    # baseline: the old launch/serve.py shape — one dispatch per request
+    per_req = jax.jit(lambda p, b: personalize_me(
+        loss, p, b, pcfg.lam, pcfg.inner_eta, pcfg.inner_steps))
+    jax.block_until_ready(per_req(params, batches[0]))      # warm-up
+    t_loop = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        for _ in range(rounds):
+            for b in batches:
+                jax.block_until_ready(per_req(params, b))
+        t_loop = min(t_loop, time.time() - t0)
+
+    server = PersonalizationServer(params, loss, pcfg, modes=("C",),
+                                   max_pending=2 * users)
+    uids = [f"user{u}" for u in range(users)]
+
+    def window():
+        for uid, b in zip(uids, batches):
+            server.submit(uid, b, mode="C")
+        server.flush()
+        jax.block_until_ready(server.stacked_heads(uids))
+        server.advance_window()
+
+    window()                                                # warm-up
+    warm_windows = server.stats["ring_windows"]
+    t_server = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        for _ in range(rounds):
+            window()
+        t_server = min(t_server, time.time() - t0)
+    stats = server.stats
+    host_mat = stats["host_materializations"]
+    n_req = users * rounds
+    speedup = t_loop / t_server
+    print(f"serve,per_request,wall_s={t_loop:.3f},"
+          f"req_per_s={n_req / t_loop:.0f}", flush=True)
+    print(f"serve,server,wall_s={t_server:.3f},"
+          f"req_per_s={n_req / t_server:.0f},"
+          f"windows={stats['ring_windows'] - warm_windows},"
+          f"cohort_calls={stats['cohort_calls']},"
+          f"host_materializations={host_mat}", flush=True)
+    print(f"serve,{t_server / n_req * 1e6:.0f},speedup={speedup:.2f}")
+    _save("serve", {"users": users, "rounds": rounds,
+                    "wall_per_request_s": t_loop,
+                    "wall_server_s": t_server, "speedup": speedup,
+                    "req_per_s_server": n_req / t_server,
+                    "req_per_s_per_request": n_req / t_loop,
+                    "host_materializations": int(host_mat)})
+    if host_mat != 0:    # steady-state contract, not a report
+        raise RuntimeError(f"serving path materialized {host_mat} banks")
+    return speedup
+
+
 def kernels():
     """µs/call for each Pallas kernel (interpret) and its jnp oracle."""
     from repro.kernels.flash_attention.kernel import flash_attention_fwd
@@ -335,6 +424,7 @@ BENCHES = {
     "table1": table1_staleness,
     "engine": engine,
     "engine_sharded": engine_sharded,
+    "serve": serve,
     "kernels": kernels,
 }
 

@@ -1,6 +1,7 @@
-"""Personalized serving: ME-personalize a Mamba2 LM on a client's token
-stream (Option C's θ̃_i(w)), then decode batched requests with the SSM
-recurrent cache.
+"""Personalized serving: four concurrent users submit their own token
+streams to a PersonalizationServer, which coalesces the Moreau-envelope
+prox solves (Option C, θ̃_i(w)) into one cohort call and decodes with the
+per-user heads vmapped over the SSM recurrent cache.
 
     PYTHONPATH=src python examples/serve_personalized.py
 """
@@ -10,5 +11,6 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     sys.argv = [sys.argv[0], "--arch", "mamba2-130m", "--smoke",
-                "--personalize", "--requests", "4", "--tokens", "16"]
+                "--personalize", "--mode", "C", "--personalize-len", "32",
+                "--requests", "4", "--tokens", "16"]
     main()

@@ -3,6 +3,7 @@ from repro.core.types import PersAFLConfig                      # noqa: F401
 from repro.core.client import client_update, split_batches_for_option  # noqa: F401
 from repro.core.server import (init_server_state, apply_update,  # noqa: F401
                                apply_buffered, apply_buffered_rows,
+                               apply_admitted_rows, admission_weights,
                                staleness_stats)
 from repro.core.maml import maml_grad, personalize_maml          # noqa: F401
 from repro.core.moreau import me_grad, personalize_me, solve_prox  # noqa: F401

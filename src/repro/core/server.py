@@ -18,10 +18,11 @@ polynomial staleness damping β/(1+τ)^a (``PersAFLConfig.staleness_damping``).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import PersAFLConfig
 from repro.kernels.fused_update.ops import (apply_delta_tree,
@@ -108,9 +109,12 @@ def apply_buffered(state: Dict, delta_sum, count, beta: float,
 
 
 @functools.lru_cache(maxsize=None)
-def _apply_buffered_rows_jit():
+def _apply_rows_state_jit(donate: bool):
+    # one body serves both stacked-apply overloads; only donation differs
+    # (the serving ring must keep the pre-apply params alive as a window
+    # snapshot, the simulators need not)
     @functools.partial(jax.jit, static_argnames=("mode",),
-                       donate_argnums=donate_argnums(0))
+                       donate_argnums=donate_argnums(0) if donate else ())
     def apply(state, delta_stack, weights, count, staleness_max,
               staleness_sum, mode: str = "auto"):
         return {
@@ -124,6 +128,31 @@ def _apply_buffered_rows_jit():
                                                      jnp.int32)),
         }
     return apply
+
+
+def admission_weights(capacity: int, rows: List[Tuple[int, int]], *,
+                      beta: float, count: int, damping: float = 0.0,
+                      tau_max: Optional[int] = None) -> np.ndarray:
+    """``[capacity]`` f32 row-weight vector for a stacked-bank server apply.
+
+    ``rows`` is ``[(row_index, staleness τ), ...]``; every listed row gets
+    ``β/count · (1+τ)^(-damping)`` and every other slot (bucket padding,
+    unadmitted rows) gets 0.  With ``tau_max`` set, rows staler than the
+    bound are zeroed — the bounded-staleness admission rule (Assumption 1's
+    τ ≤ τ_max): a straggler delta is *re-weighted into a later window's
+    apply* instead of corrupting it, and dropped only past the bound.
+    Shared by the buffered scheduler (no bound: the simulator's event order
+    can't exceed it) and the serving ring (bound enforced per window).
+    """
+    w = np.zeros(capacity, np.float32)
+    for idx, tau in rows:
+        if tau_max is not None and tau > tau_max:
+            continue
+        wt = beta / count
+        if damping:
+            wt *= (1.0 + tau) ** (-damping)
+        w[idx] = wt
+    return w
 
 
 def apply_buffered_rows(state: Dict, delta_stack, weights, count,
@@ -144,10 +173,28 @@ def apply_buffered_rows(state: Dict, delta_stack, weights, count,
     the jit the leaves are tracers that can't reveal their sharding.
     """
     mode = "ref" if spans_devices(delta_stack) else "auto"
-    return _apply_buffered_rows_jit()(state, delta_stack,
-                                      jnp.asarray(weights, jnp.float32),
-                                      count, staleness_max, staleness_sum,
-                                      mode=mode)
+    return _apply_rows_state_jit(True)(state, delta_stack,
+                                       jnp.asarray(weights, jnp.float32),
+                                       count, staleness_max, staleness_sum,
+                                       mode=mode)
+
+
+def apply_admitted_rows(state: Dict, delta_stack, weights, count,
+                        staleness_max, staleness_sum=0.0) -> Dict:
+    """Serving-window overload of :func:`apply_buffered_rows`.
+
+    Same fused stacked apply, but the incoming state is NOT donated: the
+    caller (``repro.serving.bank.DeltaRing``) retains the pre-apply params
+    as the closed window's snapshot, which straggler rows admitted into a
+    *later* window are computed against (τ ≤ τ_max) — donating the old
+    buffer (in-place on TPU) would invalidate exactly those snapshots.
+    ``weights`` normally comes from :func:`admission_weights`.
+    """
+    mode = "ref" if spans_devices(delta_stack) else "auto"
+    return _apply_rows_state_jit(False)(state, delta_stack,
+                                        jnp.asarray(weights, jnp.float32),
+                                        count, staleness_max, staleness_sum,
+                                        mode=mode)
 
 
 def staleness_stats(state: Dict) -> Dict:

@@ -64,7 +64,7 @@ import numpy as np
 from repro.core import client_update, split_batches_for_option
 from repro.core.types import PersAFLConfig
 from repro.kernels.fused_update.ops import donate_argnums
-from repro.sharding.ctx import shard_map_compat
+from repro.sharding.ctx import cohort_mesh, shard_map_compat
 
 
 def _stack(batch_list: List):
@@ -167,7 +167,8 @@ class CohortEngine:
     """
 
     def __init__(self, pcfg: PersAFLConfig, loss_fn: Callable, *,
-                 vectorized: bool = True, cohort_impl: str = "auto"):
+                 vectorized: bool = True, cohort_impl: str = "auto",
+                 client_fn: Optional[Callable] = None):
         self.pcfg = pcfg
         self.loss_fn = loss_fn
         self.vectorized = vectorized
@@ -177,13 +178,26 @@ class CohortEngine:
         self.stats: Dict[str, int] = {"cohort_calls": 0, "clients": 0,
                                       "max_cohort": 0, "padding_waste": 0,
                                       "host_materializations": 0}
+        # window-boundary hooks: every bank this engine produces is handed
+        # to each registered callback before update_cohort returns — the
+        # handoff point the serving ring uses to retain banks (and their
+        # device residency) across flush windows without the scheduler
+        # knowing the ring exists.
+        self._bank_hooks: List[Callable[[DeltaBank], None]] = []
 
-        def _one(params, batches_3q):
-            batches = split_batches_for_option(pcfg.option, batches_3q)
-            # metrics are dropped so XLA dead-code-eliminates the per-step
-            # norm reductions — schedulers only consume the delta
-            delta, _ = client_update(pcfg, loss_fn, params, batches)
-            return delta
+        if client_fn is None:
+            def _one(params, batches_3q):
+                batches = split_batches_for_option(pcfg.option, batches_3q)
+                # metrics are dropped so XLA dead-code-eliminates the
+                # per-step norm reductions — schedulers only consume the
+                # delta
+                delta, _ = client_update(pcfg, loss_fn, params, batches)
+                return delta
+        else:
+            # serving override: any (params, batch) -> params-shaped delta
+            # (e.g. a one-step MAML fine-tune or a Moreau prox solve) rides
+            # the same vmap/map/shard_map cohort machinery
+            _one = client_fn
 
         self._jit_one = jax.jit(_one)
         self._ndev = 1
@@ -196,11 +210,9 @@ class CohortEngine:
             cohort_fn = lambda params, stacked: jax.lax.map(  # noqa: E731
                 lambda b: _one(params, b), stacked)
         elif cohort_impl == "shard_map":
-            from jax.sharding import Mesh
             from jax.sharding import PartitionSpec as P
-            devices = np.asarray(jax.devices())
-            self._mesh = Mesh(devices, ("cohort",))
-            self._ndev = devices.size
+            self._mesh = cohort_mesh()
+            self._ndev = self._mesh.devices.size
 
             def _shard_body(params, stacked):
                 return jax.lax.map(lambda b: _one(params, b), stacked)
@@ -237,6 +249,16 @@ class CohortEngine:
             raise ValueError(f"unknown cohort_impl {cohort_impl!r}")
         self._jit_cohort = jax.jit(cohort_fn, donate_argnums=donate)
 
+    def add_bank_hook(self, fn: Callable[["DeltaBank"], None]) -> None:
+        """Register a bank-handoff callback (serving ring retention, stats
+        scrapers).  Called once per ``update_cohort`` with the new bank."""
+        self._bank_hooks.append(fn)
+
+    def _emit(self, bank: "DeltaBank") -> "DeltaBank":
+        for hook in self._bank_hooks:
+            hook(bank)
+        return bank
+
     def _bucket(self, k: int) -> int:
         """Pow2 bucket, rounded up to a device-count multiple when the
         cohort axis is sharded (every shard gets equal rows)."""
@@ -269,16 +291,18 @@ class CohortEngine:
         """
         k = len(batch_list)
         if k == 0:
-            return DeltaBank(rows=[], stats=self.stats)
+            return self._emit(DeltaBank(rows=[], stats=self.stats))
         if not self.vectorized:
             self.stats["cohort_calls"] += 1
             self.stats["clients"] += k
             self.stats["max_cohort"] = max(self.stats["max_cohort"], k)
-            return DeltaBank(rows=[self._jit_one(params, b)
-                                   for b in batch_list], stats=self.stats)
+            return self._emit(DeltaBank(rows=[self._jit_one(params, b)
+                                              for b in batch_list],
+                                        stats=self.stats))
         stacked, k, _ = self._pad_stack(batch_list)
-        return DeltaBank(stacked=self._jit_cohort(params, stacked), k=k,
-                         stats=self.stats)
+        return self._emit(DeltaBank(stacked=self._jit_cohort(params,
+                                                             stacked),
+                                    k=k, stats=self.stats))
 
     def update_cohort_mean(self, params, batch_list: List):
         """Cohort deltas reduced to their mean (sync FedAvg-family rounds).

@@ -44,8 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PersAFLConfig, apply_buffered_rows, apply_update,
-                        init_server_state)
+from repro.core import (PersAFLConfig, admission_weights,
+                        apply_buffered_rows, apply_update, init_server_state)
 from repro.core.server import staleness_stats
 from repro.data.federated import ClientData, sample_batches
 from repro.fl.algorithms import fedprox_update, scaffold_update
@@ -237,12 +237,9 @@ class BufferedAsyncSimulator(AsyncSimulator):
             groups.setdefault(id(bank), (bank, []))[1].append((idx, s))
         t_old = self._t
         for bank, rows in groups.values():
-            weights = np.zeros(bank.capacity, np.float32)
-            for idx, s in rows:
-                w = self.pcfg.beta / m
-                if damping:
-                    w *= (1.0 + s) ** (-damping)
-                weights[idx] = w
+            weights = admission_weights(bank.capacity, rows,
+                                        beta=self.pcfg.beta, count=m,
+                                        damping=damping)
             self.state = apply_buffered_rows(
                 self.state, bank.stacked, weights, len(rows),
                 staleness_max=max(s for _, s in rows),

@@ -1,9 +1,16 @@
-"""Personalized serving driver (Option C semantics: each client serves its
-Moreau-envelope personalized parameters θ̃_i(w), obtained with a few prox
-steps on the client's own data before decoding).
+"""Personalized serving driver.
+
+Decode is driven through :class:`repro.serving.PersonalizationServer`:
+each request is a *user* with their own token stream; the server coalesces
+all users' personalization (mode "B" one-step fine-tune or mode "C"
+Moreau-envelope prox solve) into one pow2-bucketed cohort call, and decode
+runs vmapped over the stacked per-user heads — no per-user Python loop on
+either side.  Prompt prefill is a single jitted ``lax.scan`` dispatch
+(prompt tokens advance on device); the decode loop proper stays
+step-by-step because each token depends on the previous argmax.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
-      --requests 4 --tokens 16
+      --personalize --requests 4 --tokens 16
 """
 from __future__ import annotations
 
@@ -16,21 +23,119 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduce_for_smoke
-from repro.core import personalize_me
+from repro.core.types import PersAFLConfig
 from repro.data import synthetic_token_batch
 from repro.models import api
+
+
+def _personalize_len(cfg, n: int) -> int:
+    """SSM/hybrid archs run the chunked SSD scan over the personalization
+    stream, so the length rounds up to the next chunk multiple."""
+    chunk = cfg.ssm.chunk if getattr(cfg, "ssm", None) else 1
+    return -(-max(n, 1) // chunk) * chunk
+
+
+def _user_batch(cfg, seed: int, length: int):
+    """One user's personalization stream (leaves lead with batch dim 1)."""
+    data = synthetic_token_batch(seed, 1, length, cfg.vocab)
+    batch = {k: jnp.asarray(v) for k, v in data.items()}
+    if cfg.n_visual_tokens:
+        batch["visual"] = jnp.zeros((1, cfg.n_visual_tokens, cfg.d_model),
+                                    cfg.activation_dtype)
+    if cfg.is_encdec:
+        batch["frames"] = jnp.zeros((1, cfg.enc_len, cfg.d_model),
+                                    cfg.activation_dtype)
+    return batch
+
+
+def make_prefill(cfg):
+    """Single-dispatch prompt prefill.
+
+    The prompt's first L−1 tokens only exist to warm the cache, so they
+    advance inside one jitted ``lax.scan`` instead of paying one Python
+    dispatch per token; the caller then decodes from the prompt's last
+    token.
+    """
+    def prefill(params, cache, prompt):
+        def body(c, t):
+            tok = jax.lax.dynamic_slice_in_dim(prompt, t, 1, axis=1)
+            _, c = api.decode_step(cfg, params, c, tok, t)
+            return c, None
+        steps = jnp.arange(prompt.shape[1] - 1, dtype=jnp.int32)
+        cache, _ = jax.lax.scan(body, cache, steps)
+        return cache
+    return prefill
+
+
+def _init_batch(cfg, tokens):
+    """Cache-init batch: token ids plus the encdec encoder frames."""
+    batch = {"tokens": tokens}
+    if cfg.is_encdec:
+        batch["frames"] = jnp.zeros(
+            (tokens.shape[0], cfg.enc_len, cfg.d_model),
+            cfg.activation_dtype)
+    return batch
+
+
+def _decode_shared(cfg, params, prompt, max_len, prompt_len):
+    """Batched decode with the shared global params (no personalization)."""
+    cache = api.init_cache(cfg, params, _init_batch(cfg, prompt[:, :1]),
+                           max_len, cfg.activation_dtype)
+    prefill = jax.jit(make_prefill(cfg))
+    step = jax.jit(lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos))
+    cache = prefill(params, cache, prompt)
+    tok = prompt[:, -1:]
+    generated = []
+    for pos in range(prompt_len - 1, max_len - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(pos))
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    return jnp.concatenate(generated, axis=1) if generated else None
+
+
+def _decode_personalized(cfg, heads, prompt, max_len, prompt_len):
+    """Per-user decode: every request carries its own personalized head, so
+    params/cache/tokens all vmap over the user axis (inner batch of 1)."""
+    prompt_u = prompt[:, None, :]                      # [U, 1, L]
+    init = jax.vmap(lambda p, t: api.init_cache(
+        cfg, p, _init_batch(cfg, t[:, :1]), max_len, cfg.activation_dtype))
+    cache = init(heads, prompt_u)
+    prefill = jax.jit(jax.vmap(make_prefill(cfg)))
+    step = jax.jit(jax.vmap(
+        lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos),
+        in_axes=(0, 0, 0, None)))
+    cache = prefill(heads, cache, prompt_u)
+    tok = prompt_u[:, :, -1:]                          # [U, 1, 1]
+    generated = []
+    for pos in range(prompt_len - 1, max_len - 1):
+        logits, cache = step(heads, cache, tok, jnp.int32(pos))
+        tok = jnp.argmax(logits[:, :, -1, :], axis=-1)[..., None] \
+            .astype(jnp.int32)                         # [U, 1, 1]
+        generated.append(tok[:, 0])
+    jax.block_until_ready(tok)
+    return jnp.concatenate(generated, axis=1) if generated else None
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=4, help="batch size")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="concurrent users (decode batch size)")
     ap.add_argument("--tokens", type=int, default=16, help="tokens to decode")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--personalize", action="store_true",
-                    help="apply ME personalization before serving")
+                    help="serve per-user personalized heads through "
+                         "PersonalizationServer")
+    ap.add_argument("--personalize-len", type=int, default=None,
+                    help="per-user personalization stream length "
+                         "(default: --prompt-len)")
+    ap.add_argument("--mode", choices=("B", "C"), default="C",
+                    help="personalization mode: B = one-step MAML "
+                         "fine-tune, C = Moreau prox solve")
     ap.add_argument("--lam", type=float, default=30.0)
+    ap.add_argument("--alpha", type=float, default=0.01)
     ap.add_argument("--inner-steps", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments/serve")
@@ -42,56 +147,58 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     params = api.init_params(cfg, key)
 
-    if args.personalize:
-        data = synthetic_token_batch(args.seed, args.requests, 32, cfg.vocab)
-        batch = {k: jnp.asarray(v) for k, v in data.items()}
-        if cfg.n_visual_tokens:
-            batch["visual"] = jnp.zeros(
-                (args.requests, cfg.n_visual_tokens, cfg.d_model),
-                cfg.activation_dtype)
-        if cfg.is_encdec:
-            batch["frames"] = jnp.zeros(
-                (args.requests, cfg.enc_len, cfg.d_model),
-                cfg.activation_dtype)
-        loss = lambda p, b: api.loss_fn(cfg, p, b)
-        params = personalize_me(loss, params, batch, args.lam,
-                                inner_eta=0.01, inner_steps=args.inner_steps)
-        print(f"personalized with ME (lambda={args.lam}, "
-              f"K={args.inner_steps})")
-
     B = args.requests
     max_len = args.prompt_len + args.tokens
     prompt = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
-    batch = {"tokens": prompt[:, :1]}
-    if cfg.is_encdec:
-        batch["frames"] = jnp.zeros((B, cfg.enc_len, cfg.d_model),
-                                    cfg.activation_dtype)
-    cache = api.init_cache(cfg, params, batch, max_len, cfg.activation_dtype)
 
-    step = jax.jit(lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos))
-    # prefill the prompt token-by-token (batched requests advance together)
-    tok = prompt[:, :1]
+    heads = None
+    server_stats = None
+    if args.personalize:
+        from repro.serving import PersonalizationServer
+        plen = _personalize_len(cfg, args.personalize_len
+                                if args.personalize_len is not None
+                                else args.prompt_len)
+        loss = lambda p, b: api.loss_fn(cfg, p, b)          # noqa: E731
+        pcfg = PersAFLConfig(option="C", lam=args.lam, alpha=args.alpha,
+                             inner_steps=args.inner_steps, inner_eta=0.01)
+        server = PersonalizationServer(params, loss, pcfg,
+                                       modes=(args.mode,),
+                                       max_pending=max(B, 1))
+        tickets = [server.submit(f"user{u}",
+                                 _user_batch(cfg, args.seed + u, plen),
+                                 mode=args.mode)
+                   for u in range(B)]
+        server.flush()
+        heads = server.stacked_heads([t.user for t in tickets])
+        server_stats = server.stats
+        print(f"personalized {B} users through PersonalizationServer "
+              f"(mode {args.mode}, len={plen}, "
+              f"cohort_calls={server_stats['cohort_calls']}, "
+              f"host_materializations="
+              f"{server_stats['host_materializations']})")
+
     t0 = time.time()
-    generated = []
-    for pos in range(max_len - 1):
-        logits, cache = step(params, cache, tok, jnp.int32(pos))
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
-        tok = (prompt[:, pos + 1: pos + 2] if pos + 1 < args.prompt_len
-               else nxt)
-        if pos + 1 >= args.prompt_len:
-            generated.append(nxt)
-    jax.block_until_ready(tok)
+    if heads is not None:
+        out_tokens = _decode_personalized(cfg, heads, prompt, max_len,
+                                          args.prompt_len)
+    else:
+        out_tokens = _decode_shared(cfg, params, prompt, max_len,
+                                    args.prompt_len)
     wall = time.time() - t0
-    out_tokens = jnp.concatenate(generated, axis=1) if generated else None
     tps = B * args.tokens / wall
     print(f"decoded {args.tokens} tokens × {B} requests "
           f"in {wall:.2f}s ({tps:.1f} tok/s)")
     if out_tokens is not None:
         print("sample:", out_tokens[0].tolist())
     os.makedirs(args.out, exist_ok=True)
+    record = {"arch": cfg.arch_id, "tok_per_s": tps,
+              "personalized": args.personalize, "mode": args.mode,
+              "users": B}
+    if server_stats is not None:
+        record["host_materializations"] = \
+            server_stats["host_materializations"]
     with open(os.path.join(args.out, f"serve_{cfg.arch_id}.json"), "w") as f:
-        json.dump({"arch": cfg.arch_id, "tok_per_s": tps,
-                   "personalized": args.personalize}, f, indent=2)
+        json.dump(record, f, indent=2)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,35 @@
+"""Live-traffic serving of personalized heads (the ROADMAP serving item).
+
+The paper's asynchronous bounded-staleness analysis *is* a serving problem:
+millions of users, each owning a tiny personalized head derived from the
+shared global model, arrive at arbitrary times with arbitrary (bounded)
+staleness.  This package turns the cohort engine into that request-driven
+service.
+
+Batcher **modes** map to the paper's personalization options:
+
+  * mode ``"B"`` — Option B / Per-FedAvg (Fallah et al. 2020): one-step
+    MAML fine-tune, ``head_i = w − α ∇f_i(w; D_i)``.  Cheapest; one grad.
+  * mode ``"C"`` — Option C / pFedMe (Dinh et al. 2020): Moreau-envelope
+    prox solve, ``head_i = θ̃_i(w) ≈ argmin_θ f_i(θ) + λ/2‖θ − w‖²`` via K
+    inner SGD steps.  Stronger personalization; K grads.
+
+Parts:
+
+  * :mod:`repro.serving.batcher` — request queue + micro-batcher:
+    concurrent requests coalesce into pow2-bucketed
+    :class:`repro.fl.engine.CohortEngine` calls (vmap / lax.map /
+    shard_map over the ``("cohort",)`` mesh, users keyed to shards).
+  * :mod:`repro.serving.bank` — :class:`DeltaRing`: persistent sharded
+    DeltaBank ring-buffer holding the last W windows of stacked deltas and
+    params snapshots on device; straggler rows re-weight into the next
+    window's ``apply_rows`` weight vector (τ ≤ τ_max) instead of dropping.
+  * :mod:`repro.serving.server` — :class:`PersonalizationServer`:
+    submit/poll semantics, device-resident per-user head cache, window
+    advance folding served deltas back into the global model, steady-state
+    zero ``host_materializations``.
+"""
+from repro.serving.bank import DeltaRing                        # noqa: F401
+from repro.serving.batcher import (MODES, MicroBatcher, Ticket,  # noqa: F401
+                                   personalize_delta_fn)
+from repro.serving.server import PersonalizationServer           # noqa: F401

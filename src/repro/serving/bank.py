@@ -1,0 +1,143 @@
+"""Persistent sharded DeltaBank ring-buffer (the serving-side bank).
+
+PR 2's :class:`repro.fl.engine.DeltaBank` dies with its simulator window:
+banks are produced per inter-apply window and garbage-collected once every
+row is applied.  A serving deployment has no "end of run" — personalization
+traffic arrives forever and the global model advances in aggregation
+*windows* — so :class:`DeltaRing` makes the bank persistent:
+
+  * the banks AND the params snapshot of the last ``windows`` aggregation
+    windows stay alive on device, keyed by window id and by user (a user's
+    latest delta row is addressable until its window retires);
+  * a row admitted with staleness τ > 0 — a straggler whose request was
+    stamped in an earlier window — is folded into the *current* window's
+    ``apply_rows`` weight vector via :func:`repro.core.admission_weights`
+    (β/M with FedAsync damping ``(1+τ)^{-a}``) instead of being dropped:
+    the bounded-staleness admission rule mirroring the paper's τ ≤ τ_max
+    assumption.  Rows staler than ``tau_max`` ARE dropped (and counted);
+  * the window apply routes through the non-donating
+    :func:`repro.core.apply_admitted_rows`, because retained snapshots must
+    outlive the apply (stragglers are computed against them).
+
+Persistence scope: the ring persists *across windows* (device residency, no
+host round-trip), not across process restarts — after a restart it is
+rebuilt empty from the checkpointed global params, in-flight straggler rows
+are lost, and users simply re-personalize against the fresh snapshot.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import admission_weights, apply_admitted_rows
+from repro.fl.engine import DeltaBank
+
+
+class DeltaRing:
+    """Ring of the last ``windows`` aggregation windows of stacked deltas.
+
+    ``retain`` is shaped as a :meth:`CohortEngine.add_bank_hook` callback —
+    attaching the ring to an engine keeps every bank the engine produces
+    alive for ``windows`` windows.  ``admit`` marks a specific (bank, row)
+    as contributing to the next server apply; :meth:`advance` closes the
+    window with one fused ``apply_rows`` pass per contributing bank.
+    """
+
+    def __init__(self, params0, *, windows: int = 4,
+                 tau_max: Optional[int] = None):
+        if windows < 1:
+            raise ValueError("need at least one retained window")
+        self.windows = windows
+        # a straggler can only be recomputed against a retained snapshot,
+        # so the staleness bound never exceeds the ring depth
+        self.tau_max = min(tau_max, windows - 1) if tau_max is not None \
+            else windows - 1
+        self.current = 0
+        self._snapshots: Dict[int, object] = {0: params0}
+        self._banks: Dict[int, List[DeltaBank]] = {0: []}
+        # (bank, row, τ) admitted to the window currently accumulating
+        self._pending: List[Tuple[DeltaBank, int, int]] = []
+        # user -> (window, bank, row): the user's latest served delta row
+        self._by_user: Dict[object, Tuple[int, DeltaBank, int]] = {}
+        self.stats = {"windows": 0, "admitted": 0, "stragglers": 0,
+                      "dropped": 0}
+
+    # -- retention ---------------------------------------------------------
+
+    def snapshot(self, window: int):
+        """Params the given window's cohorts were computed against."""
+        return self._snapshots[window]
+
+    def retain(self, bank: DeltaBank) -> None:
+        """Bank-handoff hook: pin ``bank`` to the current window so its
+        device buffer outlives the window (stragglers, head gathers)."""
+        self._banks[self.current].append(bank)
+
+    def lookup(self, user):
+        """-> (window, bank, row) of the user's latest admitted delta, or
+        None once the row's window has retired from the ring."""
+        return self._by_user.get(user)
+
+    @property
+    def live_banks(self) -> int:
+        return sum(len(b) for b in self._banks.values())
+
+    # -- admission ---------------------------------------------------------
+
+    def admit(self, user, bank: DeltaBank, row: int, tau: int) -> bool:
+        """Admit one delta row into the accumulating window's apply.
+
+        ``tau`` is the row's staleness in windows (0 = computed against the
+        current snapshot).  Straggler rows (τ > 0) are re-weighted into
+        THIS window — the "next" window relative to the one they were
+        stamped in — and rows past ``tau_max`` are refused.
+        """
+        if tau > self.tau_max:
+            self.stats["dropped"] += 1
+            return False
+        if tau > 0:
+            self.stats["stragglers"] += 1
+        self.stats["admitted"] += 1
+        self._pending.append((bank, row, tau))
+        self._by_user[user] = (self.current, bank, row)
+        return True
+
+    # -- window boundary ---------------------------------------------------
+
+    def advance(self, state: Dict, *, beta: float,
+                damping: float = 0.0) -> Dict:
+        """Close the accumulating window: apply every admitted row to the
+        server state and rotate the ring.
+
+        One fused ``apply_rows`` pass per contributing bank — weights fold
+        β/M, per-row staleness damping and bucket-padding masks, exactly
+        the buffered scheduler's math (:func:`admission_weights` is shared
+        with it).  Returns the post-apply state; the pre-apply params
+        become the closed window's snapshot and stay retained (the apply
+        never donates them).
+        """
+        m = len(self._pending)
+        if m:
+            groups: Dict[int, Tuple[DeltaBank, List[Tuple[int, int]]]] = {}
+            for bank, row, tau in self._pending:
+                groups.setdefault(id(bank), (bank, []))[1].append((row, tau))
+            for bank, rows in groups.values():
+                weights = admission_weights(
+                    bank.capacity, rows, beta=beta, count=m,
+                    damping=damping, tau_max=self.tau_max)
+                state = apply_admitted_rows(
+                    state, bank.stacked, weights, len(rows),
+                    staleness_max=max(t for _, t in rows),
+                    staleness_sum=float(sum(t for _, t in rows)))
+        self._pending = []
+        self.stats["windows"] += 1
+        self.current += 1
+        self._snapshots[self.current] = state["params"]
+        self._banks[self.current] = []
+        horizon = self.current - self.windows + 1
+        for w in [w for w in self._snapshots if w < horizon]:
+            del self._snapshots[w]
+            self._banks.pop(w, None)
+        for user in [u for u, (w, _, _) in self._by_user.items()
+                     if w < horizon]:
+            del self._by_user[user]
+        return state

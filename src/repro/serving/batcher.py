@@ -1,0 +1,170 @@
+"""Request queue + micro-batcher for personalization traffic.
+
+Batcher *modes* are the paper's personalization options (see the package
+docstring): mode ``"B"`` is the Per-FedAvg one-step MAML fine-tune, mode
+``"C"`` the pFedMe Moreau-envelope prox solve.  Each mode owns a
+:class:`repro.fl.engine.CohortEngine` whose ``client_fn`` computes the
+*personalization delta* — a params-shaped pytree with
+``head = w − delta`` — so concurrent users ride the exact vmap / lax.map /
+shard_map machinery (pow2 buckets, on-device DeltaBank) the training
+cohorts use, and the resulting bank rows double as the server-side update
+direction the ring folds back into the global model.
+
+Under ``cohort_impl="shard_map"`` the batcher lays the cohort out
+*shard-major*: user ``u`` always occupies a slot in shard
+``crc32(u) % n_shards`` of the ``("cohort",)`` mesh, so the user's delta
+row lands on the same device every window (stable row affinity — the
+"keyed by user shard" part of the ring-buffer).  Per-shard slots pad to a
+common pow2, which is exactly the engine's device-multiple bucket, so the
+layout adds no padding beyond what the engine would.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Callable, Dict, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.moreau import solve_prox
+from repro.core.types import PersAFLConfig
+from repro.fl.engine import CohortEngine, DeltaBank
+
+MODES = ("B", "C")
+
+
+def personalize_delta_fn(pcfg: PersAFLConfig, loss_fn: Callable,
+                         mode: str) -> Callable:
+    """(params, batch) -> personalization delta, with head = w − delta.
+
+    mode "B": delta = α ∇f(w; D)      (head = the one-step fine-tune)
+    mode "C": delta = w − θ̃(w)        (head = the prox solution θ̃)
+    Deltas accumulate in f32 like training deltas, so bank rows are
+    directly consumable by the fused ``apply_rows`` server pass.
+    """
+    if mode == "B":
+        def fn(params, batch):
+            g = jax.grad(loss_fn)(params, batch)
+            return jax.tree.map(
+                lambda gg: pcfg.alpha * gg.astype(jnp.float32), g)
+    elif mode == "C":
+        def fn(params, batch):
+            theta, _ = solve_prox(loss_fn, params, batch, pcfg.lam,
+                                  pcfg.inner_eta, pcfg.inner_steps)
+            return jax.tree.map(
+                lambda w, t: w.astype(jnp.float32) - t.astype(jnp.float32),
+                params, theta)
+    else:
+        raise ValueError(f"unknown personalization mode {mode!r}; "
+                         f"have {MODES}")
+    return fn
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Submit/poll handle for one personalization request."""
+    user: object
+    mode: str
+    stamp: int                 # ring window the request was submitted in
+    status: str = "queued"     # queued | done | dropped
+    tau: int = 0               # staleness in windows, set at drain time
+
+
+def _pow2(k: int) -> int:
+    return 1 << max(k - 1, 0).bit_length()
+
+
+class MicroBatcher:
+    """Coalesces concurrent personalization requests into cohort calls.
+
+    Requests queue until :meth:`drain`, which groups them by
+    ``(mode, stamp)`` — every group shares one params snapshot, the
+    precondition for a single cohort call — and emits one pow2-bucketed
+    ``update_cohort`` per group.  Straggler groups (stamp < current window)
+    are computed against their *stamped* snapshot, so the delta the ring
+    re-weights into the current window is the delta the user's own device
+    would have uploaded.
+    """
+
+    def __init__(self, engines: Dict[str, CohortEngine],
+                 n_shards: int = 1):
+        self.engines = engines
+        self.n_shards = max(int(n_shards), 1)
+        self._queue: List[Tuple[Ticket, Dict]] = []
+        self.stats = {"submitted": 0, "drains": 0, "cohort_calls": 0,
+                      "max_coalesced": 0, "shard_padding": 0, "dropped": 0}
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def submit(self, ticket: Ticket, batch) -> Ticket:
+        if ticket.mode not in self.engines:
+            raise ValueError(f"mode {ticket.mode!r} not enabled; "
+                             f"have {sorted(self.engines)}")
+        self.stats["submitted"] += 1
+        self._queue.append((ticket, batch))
+        return ticket
+
+    def _shard(self, user) -> int:
+        return zlib.crc32(str(user).encode()) % self.n_shards
+
+    def _layout(self, reqs: List[Tuple[Ticket, Dict]]):
+        """Shard-major cohort layout -> (batch_list, [(ticket, row)]).
+
+        With one shard the engine's own tail padding suffices; with N the
+        per-shard slot count pads to a pow2 so the total is exactly the
+        engine's device-multiple bucket (row i ↦ device i // per_shard).
+        """
+        if self.n_shards == 1:
+            return ([b for _, b in reqs],
+                    [(t, i) for i, (t, _) in enumerate(reqs)])
+        shards: List[List[Tuple[Ticket, Dict]]] = \
+            [[] for _ in range(self.n_shards)]
+        for t, b in reqs:
+            shards[self._shard(t.user)].append((t, b))
+        per = _pow2(max(max(len(s) for s in shards), 1))
+        fill = reqs[-1][1]
+        batch_list, placed = [], []
+        for si, s in enumerate(shards):
+            for j in range(per):
+                if j < len(s):
+                    t, b = s[j]
+                    batch_list.append(b)
+                    placed.append((t, si * per + j))
+                else:
+                    batch_list.append(fill)
+                    self.stats["shard_padding"] += 1
+        return batch_list, placed
+
+    def drain(self, current: int, snapshot_fn: Callable[[int], object], *,
+              tau_max: int) -> Iterator[Tuple[str, int, DeltaBank,
+                                              List[Tuple[Ticket, int]]]]:
+        """Yield ``(mode, stamp, bank, [(ticket, row), ...])`` per group.
+
+        Requests whose staleness ``current − stamp`` exceeds ``tau_max``
+        (or whose snapshot already retired from the ring) are marked
+        ``dropped`` without spending a cohort slot on them.
+        """
+        queue, self._queue = self._queue, []
+        if not queue:
+            return
+        self.stats["drains"] += 1
+        self.stats["max_coalesced"] = max(self.stats["max_coalesced"],
+                                          len(queue))
+        groups: Dict[Tuple[str, int], List[Tuple[Ticket, Dict]]] = {}
+        for ticket, batch in queue:
+            ticket.tau = current - ticket.stamp
+            if ticket.tau > tau_max:
+                ticket.status = "dropped"
+                self.stats["dropped"] += 1
+                continue
+            groups.setdefault((ticket.mode, ticket.stamp), []).append(
+                (ticket, batch))
+        for (mode, stamp), reqs in sorted(groups.items(),
+                                          key=lambda kv: kv[0][1]):
+            batch_list, placed = self._layout(reqs)
+            self.stats["cohort_calls"] += 1
+            bank = self.engines[mode].update_cohort(snapshot_fn(stamp),
+                                                    batch_list)
+            yield mode, stamp, bank, placed

@@ -1,0 +1,227 @@
+"""PersonalizationServer — submit/poll front-end over the cohort engine.
+
+Request lifecycle::
+
+    t = server.submit(user, batch, mode="C")   # queued, stamped w/ window
+    server.flush()                             # micro-batch -> cohort call
+    head = server.poll(t)                      # device-resident head pytree
+    ...
+    server.advance_window()                    # fold deltas into global w
+
+``flush`` turns the queue into pow2-bucketed cohort calls (one per
+(mode, window-stamp) group), computes a stacked *head bank*
+``heads = w_stamp − delta_stack`` in one jitted pass, admits every real row
+into the :class:`repro.serving.bank.DeltaRing`, and caches per-user head
+handles.  ``advance_window`` closes the aggregation window: admitted rows
+(including stragglers re-weighted from earlier windows) are applied to the
+global params with one fused ``apply_rows`` pass per bank.
+
+Steady-state guarantee: submit → flush → poll/head → advance never moves a
+tensor to the host — heads are device-side gathers from stacked head banks
+and ``stats["host_materializations"]`` stays 0 (pinned by tests and the
+``serve`` benchmark row).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import init_server_state, staleness_stats
+from repro.core.types import PersAFLConfig
+from repro.fl.engine import CohortEngine, DeltaBank
+from repro.serving.bank import DeltaRing
+from repro.serving.batcher import (MODES, MicroBatcher, Ticket,
+                                   personalize_delta_fn)
+
+
+def _own_copy(params):
+    return jax.tree.map(lambda x: jnp.array(x), params)
+
+
+class PersonalizationServer:
+    """Live-traffic serving of personalized heads (Options B and C).
+
+    Parameters
+    ----------
+    init_params : global model w (copied; the server owns its state)
+    loss_fn     : (params, batch) -> scalar, the per-user objective f_i
+    pcfg        : personalization hyper-params (α for mode B, λ/K/η_in for
+                  mode C, β/damping for the window apply)
+    cohort_impl : forwarded to :class:`CohortEngine` — ``"shard_map"``
+                  splits user cohorts over the ``("cohort",)`` mesh and the
+                  batcher keys users to shards
+    windows     : ring depth W (banks + params snapshots retained)
+    tau_max     : bounded-staleness admission (≤ W−1; default W−1)
+    max_pending : auto-flush threshold for the request queue
+    head_cache  : max cached per-user head handles (LRU)
+    """
+
+    def __init__(self, init_params, loss_fn: Callable,
+                 pcfg: PersAFLConfig, *, cohort_impl: str = "auto",
+                 modes: Iterable[str] = MODES, windows: int = 4,
+                 tau_max: Optional[int] = None, max_pending: int = 64,
+                 head_cache: int = 4096):
+        self.pcfg = pcfg
+        self.loss_fn = loss_fn
+        self.state = init_server_state(_own_copy(init_params))
+        self.max_pending = max_pending
+        self.head_cache = head_cache
+
+        engines: Dict[str, CohortEngine] = {}
+        shared_stats = None
+        for mode in modes:
+            eng = CohortEngine(
+                pcfg, loss_fn, cohort_impl=cohort_impl,
+                client_fn=personalize_delta_fn(pcfg, loss_fn, mode))
+            if shared_stats is None:
+                shared_stats = eng.stats
+            else:
+                eng.stats = shared_stats  # one counter set across modes
+            engines[mode] = eng
+        if not engines:
+            raise ValueError("need at least one personalization mode")
+        self.engines = engines
+        self._engine_stats = shared_stats
+
+        self.ring = DeltaRing(self.state["params"], windows=windows,
+                              tau_max=tau_max)
+        for eng in engines.values():
+            eng.add_bank_hook(self.ring.retain)   # bank handoff
+        n_shards = max(eng._ndev for eng in engines.values())
+        self.batcher = MicroBatcher(engines, n_shards=n_shards)
+
+        # user -> (head DeltaBank, row): device-resident, LRU-evicted
+        self._heads: "collections.OrderedDict" = collections.OrderedDict()
+        # one compile per (stacked-shape); reused every flush
+        self._jit_heads = jax.jit(lambda p, s: jax.tree.map(
+            lambda pp, ss: (pp[None].astype(jnp.float32) - ss).astype(
+                pp.dtype), p, s))
+
+    # -- request path ------------------------------------------------------
+
+    @property
+    def params(self):
+        """The current global model w (post last window apply)."""
+        return self.state["params"]
+
+    @property
+    def window(self) -> int:
+        return self.ring.current
+
+    def submit(self, user, batch, mode: str = "C") -> Ticket:
+        """Queue one personalization request; stamps the current window."""
+        ticket = self.batcher.submit(
+            Ticket(user=user, mode=mode, stamp=self.ring.current), batch)
+        if len(self.batcher) >= self.max_pending:
+            self.flush()
+        return ticket
+
+    def flush(self) -> int:
+        """Drain the queue into cohort calls; returns #requests served.
+
+        Per (mode, stamp) group: ONE cohort call against the stamped
+        snapshot, ONE jitted stacked-head computation, then per-row ring
+        admission + head-cache insertion (all device handles, no
+        transfers).
+        """
+        served = 0
+        for mode, stamp, bank, placed in self.batcher.drain(
+                self.ring.current, self.ring.snapshot,
+                tau_max=self.ring.tau_max):
+            heads = DeltaBank(
+                stacked=self._jit_heads(self.ring.snapshot(stamp),
+                                        bank.stacked),
+                k=bank.k, stats=self._engine_stats)
+            self.ring.retain(heads)   # head rows live as long as the bank
+            for ticket, row in placed:
+                # the ring is the admission authority: the batcher's drain
+                # bound normally pre-filters, but a refusal here must not
+                # serve a head whose delta never reached the global apply
+                if not self.ring.admit(ticket.user, bank, row, ticket.tau):
+                    ticket.status = "dropped"
+                    continue
+                self._cache_head(ticket.user, heads, row)
+                ticket.status = "done"
+                served += 1
+        return served
+
+    def poll(self, ticket: Ticket):
+        """None while queued; the user's head pytree once served.
+
+        Raises on dropped tickets (the staleness bound was exceeded) and
+        on served-but-evicted heads (LRU cache pressure) — both mean the
+        user must re-submit against a fresh snapshot.
+        """
+        if ticket.status == "queued":
+            return None
+        if ticket.status == "dropped":
+            raise RuntimeError(
+                f"request for {ticket.user!r} exceeded tau_max="
+                f"{self.ring.tau_max} (tau={ticket.tau}); re-submit")
+        if ticket.user not in self._heads:
+            raise RuntimeError(
+                f"head for {ticket.user!r} was evicted from the cache "
+                f"(head_cache={self.head_cache}); re-submit")
+        return self.head(ticket.user)
+
+    def _cache_head(self, user, heads: DeltaBank, row: int) -> None:
+        self._heads[user] = (heads, row)
+        self._heads.move_to_end(user)
+        while len(self._heads) > self.head_cache:
+            self._heads.popitem(last=False)
+
+    def head(self, user):
+        """The user's personalized head — a device-side row gather from the
+        stacked head bank (never a host materialization)."""
+        heads, row = self._heads[user]
+        self._heads.move_to_end(user)
+        return jax.tree.map(lambda x: x[row], heads.stacked)
+
+    def stacked_heads(self, users: List):
+        """``[len(users), ...]`` stacked heads (batched decode input).
+
+        One ``jnp.take`` gather when every user sits in the same head bank
+        (the steady-state micro-batch case), row-stack fallback otherwise.
+        """
+        handles = [self._heads[u] for u in users]
+        first = handles[0][0]
+        if all(h is first for h, _ in handles):
+            rows = jnp.asarray([r for _, r in handles], jnp.int32)
+            return jax.tree.map(lambda x: jnp.take(x, rows, axis=0),
+                                first.stacked)
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[self.head(u) for u in users])
+
+    # -- window boundary ---------------------------------------------------
+
+    def advance_window(self, *, flush: bool = True) -> None:
+        """Close the aggregation window: every admitted delta row
+        (stragglers included, re-weighted by ``admission_weights``) is
+        folded into the global params and the ring rotates.
+
+        ``flush=False`` models a timer-driven boundary firing while
+        requests are still queued — those requests become stragglers: the
+        next flush computes them against their *stamped* (retained)
+        snapshot and admits them into the new window's weight vector.
+        """
+        if flush:
+            self.flush()
+        self.state = self.ring.advance(self.state, beta=self.pcfg.beta,
+                                       damping=self.pcfg.staleness_damping)
+
+    # -- observability -----------------------------------------------------
+
+    @property
+    def stats(self) -> Dict:
+        s = dict(self._engine_stats)
+        s.update({f"ring_{k}": v for k, v in self.ring.stats.items()})
+        s.update({f"batcher_{k}": v for k, v in self.batcher.stats.items()})
+        s["live_banks"] = self.ring.live_banks
+        s["cached_heads"] = len(self._heads)
+        return s
+
+    def staleness(self) -> Dict:
+        return staleness_stats(self.state)

@@ -41,6 +41,21 @@ def shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes):
                check_rep=False, auto=auto)
 
 
+def cohort_mesh() -> "jax.sharding.Mesh":
+    """The 1-D ``("cohort",)`` mesh over every addressable device.
+
+    This is the layout contract shared by ``fl/engine.py``'s
+    ``cohort_impl="shard_map"`` and the serving batcher's user→shard keying
+    (``repro.serving.batcher``): row ``i`` of a ``[bucket, ...]`` cohort
+    buffer lands on device ``i // (bucket // n_devices)``, so a batcher
+    that places a user at a stable per-shard slot pins that user's delta
+    rows to one device across windows.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()), ("cohort",))
+
+
 def _rules() -> Optional[Dict[str, "jax.sharding.PartitionSpec"]]:
     return getattr(_state, "rules", None)
 

@@ -1,0 +1,262 @@
+"""PersonalizationServer subsystem: head correctness against the direct
+personalization functions, bounded-staleness straggler admission against a
+hand-rolled oracle, micro-batcher bucketing/shard layout, ring retention,
+and the steady-state zero-host-materialization contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PersAFLConfig
+from repro.core.maml import personalize_maml
+from repro.core.moreau import personalize_me
+from repro.serving import MicroBatcher, PersonalizationServer, Ticket
+
+
+def loss(p, b):
+    logits = b["x"] @ p["w"] + p["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(jax.nn.one_hot(b["y"], 4) * logp, -1))
+
+
+def user_batch(seed, n=8, d=5):
+    rng = np.random.RandomState(seed)
+    return {"x": rng.randn(n, d).astype(np.float32),
+            "y": rng.randint(0, 4, n).astype(np.int32)}
+
+
+def _params(seed=0, d=5):
+    rng = np.random.RandomState(seed)
+    return {"w": jnp.asarray(0.1 * rng.randn(d, 4).astype(np.float32)),
+            "b": jnp.zeros((4,))}
+
+
+def _pcfg(**kw):
+    base = dict(option="C", lam=20.0, inner_steps=5, inner_eta=0.05,
+                alpha=0.1, beta=0.5)
+    base.update(kw)
+    return PersAFLConfig(**base)
+
+
+def _close(a, b, **kw):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=kw.get("rtol", 1e-5),
+                                   atol=kw.get("atol", 1e-6))
+
+
+# -- head correctness ------------------------------------------------------
+
+@pytest.mark.parametrize("cohort_impl", ["auto", "shard_map"])
+def test_mode_c_head_equals_prox_solve(cohort_impl):
+    params = _params()
+    pcfg = _pcfg()
+    srv = PersonalizationServer(params, loss, pcfg,
+                                cohort_impl=cohort_impl)
+    tickets = [srv.submit(f"u{i}", user_batch(i)) for i in range(5)]
+    assert all(srv.poll(t) is None for t in tickets)
+    srv.flush()
+    for i, t in enumerate(tickets):
+        ref = personalize_me(loss, params, user_batch(i), pcfg.lam,
+                             pcfg.inner_eta, pcfg.inner_steps)
+        _close(srv.poll(t), ref)
+
+
+def test_mode_b_head_equals_one_step_finetune():
+    params = _params()
+    pcfg = _pcfg()
+    srv = PersonalizationServer(params, loss, pcfg, modes=("B",))
+    t = srv.submit("u0", user_batch(3), mode="B")
+    srv.flush()
+    _close(srv.poll(t), personalize_maml(loss, params, user_batch(3),
+                                         pcfg.alpha))
+
+
+def test_stacked_heads_match_rows():
+    srv = PersonalizationServer(_params(), loss, _pcfg())
+    tickets = [srv.submit(f"u{i}", user_batch(i)) for i in range(4)]
+    srv.flush()
+    stacked = srv.stacked_heads([t.user for t in tickets])
+    for i, t in enumerate(tickets):
+        _close(jax.tree.map(lambda x: x[i], stacked), srv.head(t.user))
+
+
+# -- straggler admission ---------------------------------------------------
+
+def test_straggler_admission_matches_oracle():
+    """A request stamped in window t but drained in window t+1 must be
+    computed against w_t and re-weighted into window t+1's apply with the
+    staleness discount — pinned against a hand-rolled oracle."""
+    damping = 0.7
+    pcfg = _pcfg(staleness_damping=damping)
+    params0 = _params()
+    srv = PersonalizationServer(params0, loss, pcfg, windows=3)
+
+    # window 0: two fresh users, applied at the boundary
+    srv.submit("a", user_batch(1))
+    srv.submit("b", user_batch(2))
+    srv.flush()
+    # late request queued BEFORE the boundary fires; drained after it
+    srv.submit("late", user_batch(3))
+    srv.advance_window(flush=False)
+    # window 1: one fresh user joins the straggler
+    t_late_check = srv.submit("c", user_batch(4))
+    srv.advance_window()   # flushes: c fresh (τ=0), late straggler (τ=1)
+    assert srv.stats["ring_stragglers"] == 1
+    assert srv.stats["ring_dropped"] == 0
+
+    def prox_delta(w, seed):
+        theta = personalize_me(loss, w, user_batch(seed), pcfg.lam,
+                               pcfg.inner_eta, pcfg.inner_steps)
+        return jax.tree.map(lambda a, b: np.asarray(a) - np.asarray(b),
+                            w, theta)
+
+    # oracle: window 0 applies a,b at β/2 each
+    d_a, d_b = prox_delta(params0, 1), prox_delta(params0, 2)
+    params1 = jax.tree.map(
+        lambda w, da, db: np.asarray(w) - pcfg.beta / 2 * (da + db),
+        params0, d_a, d_b)
+    # window 1: fresh c at β/2, late row (computed at w_0!) at
+    # β/2·(1+1)^{-damping}
+    d_c = prox_delta(params1, 4)
+    d_late = prox_delta(params0, 3)
+    w_late = pcfg.beta / 2 * (1.0 + 1.0) ** (-damping)
+    params2 = jax.tree.map(
+        lambda w, dc, dl: w - pcfg.beta / 2 * dc - w_late * dl,
+        params1, d_c, d_late)
+    _close(srv.params, params2, rtol=1e-5, atol=1e-5)
+    # the straggler was still served a head — computed at its stamped w_0
+    _close(srv.poll(t_late_check),
+           personalize_me(loss, params1, user_batch(4), pcfg.lam,
+                          pcfg.inner_eta, pcfg.inner_steps))
+    _close(srv.head("late"),
+           personalize_me(loss, params0, user_batch(3), pcfg.lam,
+                          pcfg.inner_eta, pcfg.inner_steps))
+
+
+def test_past_tau_max_is_dropped_not_applied():
+    srv = PersonalizationServer(_params(), loss, _pcfg(), windows=2)
+    assert srv.ring.tau_max == 1
+    t = srv.submit("slow", user_batch(0))
+    srv.advance_window(flush=False)
+    srv.advance_window(flush=False)      # τ = 2 > τ_max = 1
+    before = jax.tree.map(np.asarray, srv.params)
+    srv.flush()
+    assert t.status == "dropped" and t.tau == 2
+    assert srv.stats["batcher_dropped"] == 1   # refused pre-cohort: the
+    assert srv.stats["ring_dropped"] == 0      # drop never cost a slot
+    with pytest.raises(RuntimeError, match="tau_max"):
+        srv.poll(t)
+    srv.advance_window()
+    _close(srv.params, before)           # dropped row never applied
+
+
+def test_ring_retention_prunes_old_windows():
+    srv = PersonalizationServer(_params(), loss, _pcfg(), windows=2)
+    srv.submit("u0", user_batch(0))
+    srv.flush()
+    assert srv.ring.lookup("u0") is not None
+    live0 = srv.ring.live_banks
+    assert live0 > 0
+    for _ in range(3):
+        srv.advance_window()
+    assert srv.ring.lookup("u0") is None
+    assert srv.ring.live_banks == 0      # old windows' banks released
+
+
+# -- batching --------------------------------------------------------------
+
+def test_micro_batcher_groups_by_mode_and_buckets_pow2():
+    srv = PersonalizationServer(_params(), loss, _pcfg(), modes=("B", "C"))
+    for i in range(5):
+        srv.submit(f"c{i}", user_batch(i), mode="C")
+    for i in range(3):
+        srv.submit(f"b{i}", user_batch(10 + i), mode="B")
+    srv.flush()
+    s = srv.stats
+    assert s["batcher_drains"] == 1
+    assert s["cohort_calls"] == 2        # one per mode group
+    # pow2 buckets: 5 -> 8 (waste 3), 3 -> 4 (waste 1)
+    assert s["padding_waste"] == 4
+    assert s["max_cohort"] == 5
+
+
+def test_auto_flush_at_max_pending():
+    srv = PersonalizationServer(_params(), loss, _pcfg(), max_pending=4)
+    tickets = [srv.submit(f"u{i}", user_batch(i)) for i in range(4)]
+    assert all(t.status == "done" for t in tickets)   # flushed on the 4th
+
+
+def test_shard_major_layout_preserves_row_identity():
+    """With a sharded batcher layout every user's head must still be the
+    user's own solve — placement moves rows, never mixes them."""
+    params = _params()
+    pcfg = _pcfg()
+    srv = PersonalizationServer(params, loss, pcfg)
+    srv.batcher.n_shards = 4             # force the shard-major path
+    tickets = [srv.submit(f"u{i}", user_batch(i)) for i in range(5)]
+    srv.flush()
+    assert srv.stats["batcher_shard_padding"] > 0
+    for i, t in enumerate(tickets):
+        _close(srv.poll(t), personalize_me(loss, params, user_batch(i),
+                                           pcfg.lam, pcfg.inner_eta,
+                                           pcfg.inner_steps))
+    # stable keying: the same users land in the same shard slots again
+    b = MicroBatcher(srv.engines, n_shards=4)
+    assert all(b._shard(f"u{i}") == srv.batcher._shard(f"u{i}")
+               for i in range(5))
+
+
+def test_ticket_unknown_mode_rejected():
+    srv = PersonalizationServer(_params(), loss, _pcfg(), modes=("C",))
+    with pytest.raises(ValueError, match="not enabled"):
+        srv.submit("u", user_batch(0), mode="B")
+    with pytest.raises(ValueError, match="unknown personalization mode"):
+        PersonalizationServer(_params(), loss, _pcfg(), modes=("Z",))
+
+
+# -- steady-state contract -------------------------------------------------
+
+def test_steady_state_zero_host_materializations():
+    """submit → flush → poll/stacked_heads → advance over many windows
+    never moves a delta or head to the host."""
+    srv = PersonalizationServer(_params(), loss, _pcfg(), windows=3)
+    users = [f"u{i}" for i in range(6)]
+    for _ in range(5):
+        tickets = [srv.submit(u, user_batch(i))
+                   for i, u in enumerate(users)]
+        srv.flush()
+        for t in tickets:
+            jax.block_until_ready(jax.tree.leaves(srv.poll(t))[0])
+        jax.block_until_ready(
+            jax.tree.leaves(srv.stacked_heads(users))[0])
+        srv.advance_window()
+    assert srv.stats["host_materializations"] == 0
+    assert srv.stats["ring_windows"] == 5
+    assert int(srv.staleness()["server_rounds"]) == 30
+    for leaf in jax.tree.leaves(srv.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_head_cache_lru_eviction():
+    srv = PersonalizationServer(_params(), loss, _pcfg(), head_cache=3)
+    tickets = [srv.submit(f"u{i}", user_batch(i)) for i in range(5)]
+    srv.flush()
+    assert srv.stats["cached_heads"] == 3
+    with pytest.raises(KeyError):
+        srv.head("u0")                    # evicted
+    with pytest.raises(RuntimeError, match="evicted"):
+        srv.poll(tickets[0])              # served but evicted: re-submit
+    jax.block_until_ready(jax.tree.leaves(srv.head("u4"))[0])
+
+
+def test_window_apply_advances_global_model():
+    srv = PersonalizationServer(_params(), loss, _pcfg())
+    before = jax.tree.map(np.asarray, srv.params)
+    srv.submit("u", user_batch(0))
+    srv.advance_window()
+    moved = sum(float(np.sum(np.abs(np.asarray(a) - b)))
+                for a, b in zip(jax.tree.leaves(srv.params),
+                                jax.tree.leaves(before)))
+    assert moved > 0
+    assert int(srv.staleness()["server_rounds"]) == 1

@@ -116,6 +116,44 @@ def test_shard_map_buffered_simulator_end_to_end():
         assert bool(jnp.all(jnp.isfinite(leaf)))
 
 
+@pytest.mark.parametrize("k", [5, 13, 17])
+def test_padding_waste_matches_vmap_at_non_pow2_cohorts(k):
+    """Bucket accounting parity: at non-pow2 cohort sizes the shard_map
+    bucket (device-count multiple) coincides with the vmap pow2 bucket
+    whenever pow2(k) ≥ n_devices, so ``padding_waste`` must match; below
+    that the sharded bucket is exactly the device count."""
+    params = {"w": jnp.arange(1.0, 6.0) * 0.1}
+    batch_list = [_client_batches(seed) for seed in range(k)]
+    e_ref = CohortEngine(_pcfg("A"), quad_loss, cohort_impl="vmap")
+    e_sh = CohortEngine(_pcfg("A"), quad_loss, cohort_impl="shard_map")
+    e_ref.update_cohort(params, batch_list)
+    e_sh.update_cohort(params, batch_list)
+    pow2 = 1 << (k - 1).bit_length()
+    assert e_ref.stats["padding_waste"] == pow2 - k
+    if pow2 >= e_sh._ndev:
+        assert e_sh.stats["padding_waste"] == e_ref.stats["padding_waste"]
+    else:
+        assert e_sh.stats["padding_waste"] == e_sh._ndev - k
+
+
+def test_sharded_buffered_flush_keeps_deltas_on_device():
+    """A buffered flush consumed straight from a sharded bank does zero
+    host materializations — and materializing a row afterwards counts."""
+    params = {"w": jnp.arange(1.0, 6.0) * 0.1}
+    batch_list = [_client_batches(seed) for seed in range(6)]
+    engine = CohortEngine(_pcfg("A"), quad_loss, cohort_impl="shard_map")
+    state = init_server_state(jax.tree.map(jnp.array, params))
+    bank = engine.update_cohort(state["params"], batch_list)
+    weights = np.zeros(bank.capacity, np.float32)
+    weights[:6] = 0.5 / 6
+    state = apply_buffered_rows(state, bank.stacked, weights, 6,
+                                staleness_max=0)
+    jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+    assert engine.stats["host_materializations"] == 0
+    bank.row(0)
+    assert engine.stats["host_materializations"] == 1
+
+
 _SUBPROC = textwrap.dedent("""
     import jax, numpy as np, jax.numpy as jnp
     assert jax.device_count() == 8, jax.device_count()
@@ -143,6 +181,13 @@ _SUBPROC = textwrap.dedent("""
     for r, g in zip(ref, bank):
         np.testing.assert_allclose(np.asarray(g["w"]), np.asarray(r["w"]),
                                    rtol=1e-5, atol=1e-5)
+    # non-pow2 cohort on a real 8-way split: device-multiple bucket ==
+    # pow2 bucket, so padding accounting matches the vmap path
+    e13 = CohortEngine(pcfg, quad_loss, cohort_impl="shard_map")
+    e13.update_cohort(params, bl[:13])
+    ev13 = CohortEngine(pcfg, quad_loss, cohort_impl="vmap")
+    ev13.update_cohort(params, bl[:13])
+    assert e13.stats["padding_waste"] == ev13.stats["padding_waste"] == 3
     print("SHARDED8-OK")
 """)
 
