@@ -12,8 +12,8 @@ import numpy as np
 from repro.configs.paper_models import CIFAR_CNN, MNIST_CNN
 from repro.core import PersAFLConfig
 from repro.data import make_federated_dataset
-from repro.fl import AsyncSimulator, DelayModel, SyncSimulator, \
-    make_personalized_eval
+from repro.fl import (DelayModel, FLRun, immediate, make_personalized_eval,
+                      strategy, sync_barrier)
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
 
 FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
@@ -56,16 +56,17 @@ def run_algo(algo: str, clients, params, loss, ev, *, seed: int = 0,
         option = {"fedasync": "A", "persafl-maml": "B", "persafl-me": "C"}[algo]
         pcfg = PersAFLConfig(option=option, eta=0.002, **common)
         rounds = async_rounds if option == "A" else max(async_rounds // 2, 40)
-        sim = AsyncSimulator(clients=clients, loss_fn=loss,
-                             init_params=params, pcfg=pcfg, delays=delays,
-                             batch_size=batch, seed=seed)
-        hist = sim.run(max_server_rounds=rounds,
+        sim = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                    pcfg=pcfg, delays=delays,
+                    strategy=strategy("persafl", option=option),
+                    schedule=immediate(), batch_size=batch, seed=seed)
+        hist = sim.run(max_rounds=rounds,
                        eval_every=max(rounds // 10, 5), eval_fn=ev)
     else:
         pcfg = PersAFLConfig(option="A", eta=0.01, **common)
-        sim = SyncSimulator(clients=clients, loss_fn=loss, init_params=params,
-                            pcfg=pcfg, delays=delays, algo=algo,
-                            clients_per_round=10, batch_size=batch, seed=seed)
+        sim = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                    pcfg=pcfg, delays=delays, strategy=strategy(algo),
+                    schedule=sync_barrier(10), batch_size=batch, seed=seed)
         hist = sim.run(max_rounds=sync_rounds, eval_every=1, eval_fn=ev)
     return {"algo": algo, "times": hist.times, "acc": hist.acc,
             "wall_s": time.time() - t0,

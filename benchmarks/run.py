@@ -107,19 +107,19 @@ def fig2c_cifar():
 def table1_staleness():
     """Empirical staleness tolerance: FedAsync accuracy vs delay scale."""
     from repro.core import PersAFLConfig
-    from repro.fl import AsyncSimulator, DelayModel
+    from repro.fl import DelayModel, FLRun, immediate
     clients, params, loss, acc, ev = setup("mnist", n_clients=20)
     rounds = 60 if FAST else 120
     rows = []
     for scale in (1.0, 4.0, 16.0):
         pcfg = PersAFLConfig(option="A", q_local=5, eta=0.01)
-        sim = AsyncSimulator(clients=clients, loss_fn=loss,
-                             init_params=params, pcfg=pcfg,
-                             delays=DelayModel(len(clients), seed=1,
-                                               scale=scale,
-                                               jitter=(0.2, 3.0)),
-                             batch_size=16, seed=0)
-        h = sim.run(max_server_rounds=rounds, eval_every=rounds, eval_fn=ev)
+        sim = FLRun(clients=clients, loss_fn=loss,
+                    init_params=params, pcfg=pcfg,
+                    delays=DelayModel(len(clients), seed=1, scale=scale,
+                                      jitter=(0.2, 3.0)),
+                    strategy="fedasync", schedule=immediate(),
+                    batch_size=16, seed=0)
+        h = sim.run(max_rounds=rounds, eval_every=rounds, eval_fn=ev)
         tau = max(h.staleness) if h.staleness else 0
         rows.append({"delay_scale": scale, "tau_max": tau,
                      "acc": h.acc[-1] if h.acc else 0.0})
@@ -133,7 +133,8 @@ def table1_staleness():
 
 def engine():
     """Cohort engine speedup: one vmapped call per inter-apply window vs one
-    jitted dispatch per client event, same BufferedAsyncSimulator schedule.
+    jitted dispatch per client event, same ``FLRun(schedule=buffered(M))``
+    schedule.
 
     Uses the dispatch-bound regime the engine targets — a per-user
     personalized head (logistic model on feature vectors, the serving-side
@@ -141,7 +142,7 @@ def engine():
     device round-trips per window, the engine pays one."""
     from repro.core import PersAFLConfig, init_server_state
     from repro.data.federated import ClientData
-    from repro.fl import BufferedAsyncSimulator, DelayModel
+    from repro.fl import DelayModel, FLRun, buffered
 
     d, n_clients = 32, 32
     rng = np.random.RandomState(0)
@@ -161,11 +162,11 @@ def engine():
     rounds = 1536 if FAST else 4096
     walls, calls = {}, {}
     for vectorized in (True, False):
-        sim = BufferedAsyncSimulator(
+        sim = FLRun(
             clients=clients, loss_fn=loss, init_params=params,
-            pcfg=PersAFLConfig(option="A", q_local=1, eta=0.05,
-                               buffer_size=32),
+            pcfg=PersAFLConfig(option="A", q_local=1, eta=0.05),
             delays=DelayModel(len(clients), seed=1), batch_size=8, seed=0,
+            strategy="persafl", schedule=buffered(32),
             vectorized=vectorized)
         def reset():
             # replay the identical schedule every repetition: fresh batch
@@ -178,12 +179,12 @@ def engine():
                                     padding_waste=0, host_materializations=0)
 
         reset()
-        sim.run(max_server_rounds=rounds)          # warm-up: compiles
+        sim.run(max_rounds=rounds)                 # warm-up: compiles
         best = float("inf")
         for _ in range(3):                         # best-of-3: 2-vCPU noise
             reset()
             t0 = time.time()
-            sim.run(max_server_rounds=rounds)
+            sim.run(max_rounds=rounds)
             best = min(best, time.time() - t0)
         walls[vectorized] = best
         stats = dict(sim.engine.stats)             # identical per repetition

@@ -2,44 +2,54 @@
 FedAsync and PersA-FL-ME under increasing communication-delay spread and
 report max staleness vs final personalized accuracy.  The buffered rows
 (M=8) show the FedBuff-style scheduler's staleness profile at the same
-delay scales — all rows run on the vectorized cohort engine.
+delay scales — every row is the same ``FLRun`` with a different
+``schedule=`` (immediate vs buffered), all on the vectorized cohort engine.
 
     PYTHONPATH=src python examples/staleness_sweep.py
+
+(Set EXAMPLES_SMOKE=1 to shrink the sweep for CI.)
 """
-import jax
+import os
 
 from repro.configs.paper_models import MNIST_CNN
 from repro.core import PersAFLConfig
 from repro.data import make_federated_dataset
-from repro.fl import (AsyncSimulator, BufferedAsyncSimulator, DelayModel,
-                      make_personalized_eval)
+from repro.fl import DelayModel, FLRun, buffered, immediate, \
+    make_personalized_eval, strategy
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+import jax
+
+SMOKE = bool(int(os.environ.get("EXAMPLES_SMOKE", "0")))
 
 
 def main():
-    clients = make_federated_dataset("mnist", n_clients=15,
+    clients = make_federated_dataset("mnist", n_clients=6 if SMOKE else 15,
                                      classes_per_client=5, seed=0)
     params = init_cnn(MNIST_CNN, jax.random.PRNGKey(0))
     loss = lambda p, b: cnn_loss(MNIST_CNN, p, b, train=False)
     acc = lambda p, b: cnn_accuracy(MNIST_CNN, p, b)
     ev = make_personalized_eval(loss, acc, clients, ft_steps=1, ft_lr=0.01)
 
+    rounds = 16 if SMOKE else 80
+    scales = (1.0, 4.0) if SMOKE else (1.0, 4.0, 16.0)
     print("option,delay_scale,tau_max,tau_mean,final_acc")
     for option in ("A", "C"):
         for buffer_m in (1, 8):
-            for scale in (1.0, 4.0, 16.0):
+            for scale in scales:
                 pcfg = PersAFLConfig(option=option, q_local=5, eta=0.01,
-                                     lam=25.0, inner_steps=5, inner_eta=0.02,
-                                     buffer_size=buffer_m)
-                cls = AsyncSimulator if buffer_m == 1 \
-                    else BufferedAsyncSimulator
-                sim = cls(
+                                     lam=25.0, inner_steps=5,
+                                     inner_eta=0.02)
+                run = FLRun(
                     clients=clients, loss_fn=loss, init_params=params,
                     pcfg=pcfg,
                     delays=DelayModel(len(clients), seed=1, scale=scale,
                                       jitter=(0.2, 3.0)),
+                    strategy=strategy("persafl", option=option),
+                    schedule=immediate() if buffer_m == 1
+                    else buffered(buffer_m),
                     batch_size=16, seed=0)
-                h = sim.run(max_server_rounds=80, eval_every=80, eval_fn=ev)
+                h = run.run(max_rounds=rounds, eval_every=rounds,
+                            eval_fn=ev)
                 tau = max(h.staleness)
                 tau_mean = sum(h.staleness) / len(h.staleness)
                 label = option if buffer_m == 1 else f"{option}-buf{buffer_m}"

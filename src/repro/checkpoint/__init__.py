@@ -1,2 +1,3 @@
 from repro.checkpoint.store import (save_pytree, load_pytree,      # noqa: F401
-                                    save_server_state, load_server_state)
+                                    load_meta, save_server_state,
+                                    load_server_state)

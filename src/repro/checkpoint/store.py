@@ -1,11 +1,14 @@
 """npz-based pytree checkpointing (no orbax dependency).
 
 Pytrees are flattened to ``path/to/leaf``-keyed arrays; structure (dicts,
-lists, dataclass-free) round-trips from the key paths.  Server state
-(PersA-FL version counters) is stored alongside the params.
+lists) round-trips from the key paths.  Typed containers
+(:class:`repro.core.types.ServerState`) are stored as their field dicts and
+re-typed on load, so the server-state checkpoint format is unchanged from
+the raw-dict era — old checkpoints load into the new dataclass.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 from typing import Any, Dict
@@ -16,7 +19,10 @@ import numpy as np
 
 def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
     out: Dict[str, np.ndarray] = {}
-    if isinstance(tree, dict):
+    if dataclasses.is_dataclass(tree) and not isinstance(tree, type):
+        out.update(_flatten({f.name: getattr(tree, f.name)
+                             for f in dataclasses.fields(tree)}, prefix))
+    elif isinstance(tree, dict):
         for k in sorted(tree):
             out.update(_flatten(tree[k], f"{prefix}{k}/"))
     elif isinstance(tree, (list, tuple)):
@@ -67,9 +73,30 @@ def load_pytree(path: str):
     return _unflatten(flat)
 
 
-def save_server_state(path: str, state: Dict, meta: Dict | None = None):
+def load_meta(path: str) -> Dict | None:
+    """The sidecar ``.meta.json`` written by :func:`save_pytree`, or None."""
+    if path.endswith(".npz"):
+        path = path[:-len(".npz")]
+    meta_path = path + ".meta.json"
+    if not os.path.exists(meta_path):
+        return None
+    with open(meta_path) as f:
+        return json.load(f)
+
+
+def save_server_state(path: str, state, meta: Dict | None = None):
     save_pytree(path, state, meta)
 
 
-def load_server_state(path: str) -> Dict:
-    return load_pytree(path)
+def load_server_state(path: str):
+    """Load a server-state checkpoint, re-typed as :class:`ServerState`.
+
+    Pre-PR-4 checkpoints (raw dicts with the same four keys) load
+    identically — the on-disk layout never changed.
+    """
+    from repro.core.types import ServerState
+    tree = load_pytree(path)
+    if isinstance(tree, dict) and set(tree) == {
+            f.name for f in dataclasses.fields(ServerState)}:
+        return ServerState.from_dict(tree)
+    return tree

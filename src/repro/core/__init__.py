@@ -1,5 +1,5 @@
 """PersA-FL core: the paper's contribution (Algorithms 1 & 2)."""
-from repro.core.types import PersAFLConfig                      # noqa: F401
+from repro.core.types import PersAFLConfig, ServerState          # noqa: F401
 from repro.core.client import client_update, split_batches_for_option  # noqa: F401
 from repro.core.server import (init_server_state, apply_update,  # noqa: F401
                                apply_buffered, apply_buffered_rows,

@@ -14,6 +14,10 @@ Every apply routes through ``kernels/fused_update.apply_delta_tree`` — a
 single read-modify-write pass per leaf with a *traced* scale, so one compile
 serves every staleness value, buffer count, and the optional FedAsync-style
 polynomial staleness damping β/(1+τ)^a (``PersAFLConfig.staleness_damping``).
+
+Server state is the typed :class:`repro.core.types.ServerState` pytree
+(params, t, Σ τ, max τ) — every apply takes one and returns one; the raw
+dict spelling survives only as ``state["..."]`` read compatibility.
 """
 from __future__ import annotations
 
@@ -24,19 +28,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import PersAFLConfig
+from repro.core.types import PersAFLConfig, ServerState
 from repro.kernels.fused_update.ops import (apply_delta_tree,
                                             apply_rows_tree, donate_argnums,
                                             spans_devices)
 
 
-def init_server_state(params) -> Dict:
-    return {
-        "params": params,
-        "t": jnp.zeros((), jnp.int32),
-        "staleness_sum": jnp.zeros((), jnp.float32),
-        "staleness_max": jnp.zeros((), jnp.int32),
-    }
+def init_server_state(params) -> ServerState:
+    return ServerState(
+        params=params,
+        t=jnp.zeros((), jnp.int32),
+        staleness_sum=jnp.zeros((), jnp.float32),
+        staleness_max=jnp.zeros((), jnp.int32),
+    )
 
 
 # the whole apply — fused param update AND the counter/staleness
@@ -53,18 +57,18 @@ def _apply_update_jit():
         staleness = jnp.asarray(staleness, jnp.int32)
         scale = jnp.asarray(beta, jnp.float32) \
             * (1.0 + staleness.astype(jnp.float32)) ** (-damping)
-        return {
-            "params": apply_delta_tree(state["params"], delta, scale),
-            "t": state["t"] + 1,
-            "staleness_sum": state["staleness_sum"]
+        return ServerState(
+            params=apply_delta_tree(state.params, delta, scale),
+            t=state.t + 1,
+            staleness_sum=state.staleness_sum
             + staleness.astype(jnp.float32),
-            "staleness_max": jnp.maximum(state["staleness_max"], staleness),
-        }
+            staleness_max=jnp.maximum(state.staleness_max, staleness),
+        )
     return apply
 
 
-def apply_update(state: Dict, delta, beta: float, staleness,
-                 damping: float = 0.0) -> Dict:
+def apply_update(state: ServerState, delta, beta: float, staleness,
+                 damping: float = 0.0) -> ServerState:
     """Paper-faithful single-delta apply (Algorithm 1 step 4).
 
     ``damping`` > 0 enables the FedAsync-style polynomial staleness
@@ -81,20 +85,20 @@ def _apply_buffered_jit():
     def apply(state, delta_sum, count, beta, staleness_max, staleness_sum):
         count = jnp.asarray(count)
         scale = beta / jnp.maximum(count.astype(jnp.float32), 1.0)
-        return {
-            "params": apply_delta_tree(state["params"], delta_sum, scale),
-            "t": state["t"] + count.astype(jnp.int32),
-            "staleness_sum": state["staleness_sum"]
+        return ServerState(
+            params=apply_delta_tree(state.params, delta_sum, scale),
+            t=state.t + count.astype(jnp.int32),
+            staleness_sum=state.staleness_sum
             + jnp.asarray(staleness_sum, jnp.float32),
-            "staleness_max": jnp.maximum(state["staleness_max"],
-                                         jnp.asarray(staleness_max,
-                                                     jnp.int32)),
-        }
+            staleness_max=jnp.maximum(state.staleness_max,
+                                      jnp.asarray(staleness_max,
+                                                  jnp.int32)),
+        )
     return apply
 
 
-def apply_buffered(state: Dict, delta_sum, count, beta: float,
-                   staleness_max, staleness_sum=0.0) -> Dict:
+def apply_buffered(state: ServerState, delta_sum, count, beta: float,
+                   staleness_max, staleness_sum=0.0) -> ServerState:
     """FedBuff-style buffered apply: w ← w − β/M Σ Δ (one server round).
 
     ``delta_sum`` is typically the result of a psum over the cohort mesh
@@ -117,16 +121,16 @@ def _apply_rows_state_jit(donate: bool):
                        donate_argnums=donate_argnums(0) if donate else ())
     def apply(state, delta_stack, weights, count, staleness_max,
               staleness_sum, mode: str = "auto"):
-        return {
-            "params": apply_rows_tree(state["params"], delta_stack, weights,
-                                      mode=mode),
-            "t": state["t"] + jnp.asarray(count, jnp.int32),
-            "staleness_sum": state["staleness_sum"]
+        return ServerState(
+            params=apply_rows_tree(state.params, delta_stack, weights,
+                                   mode=mode),
+            t=state.t + jnp.asarray(count, jnp.int32),
+            staleness_sum=state.staleness_sum
             + jnp.asarray(staleness_sum, jnp.float32),
-            "staleness_max": jnp.maximum(state["staleness_max"],
-                                         jnp.asarray(staleness_max,
-                                                     jnp.int32)),
-        }
+            staleness_max=jnp.maximum(state.staleness_max,
+                                      jnp.asarray(staleness_max,
+                                                  jnp.int32)),
+        )
     return apply
 
 
@@ -155,8 +159,8 @@ def admission_weights(capacity: int, rows: List[Tuple[int, int]], *,
     return w
 
 
-def apply_buffered_rows(state: Dict, delta_stack, weights, count,
-                        staleness_max, staleness_sum=0.0) -> Dict:
+def apply_buffered_rows(state: ServerState, delta_stack, weights, count,
+                        staleness_max, staleness_sum=0.0) -> ServerState:
     """Stacked-buffer overload of :func:`apply_buffered`.
 
     ``delta_stack`` is a DeltaBank buffer — a params-shaped pytree whose
@@ -179,8 +183,8 @@ def apply_buffered_rows(state: Dict, delta_stack, weights, count,
                                        mode=mode)
 
 
-def apply_admitted_rows(state: Dict, delta_stack, weights, count,
-                        staleness_max, staleness_sum=0.0) -> Dict:
+def apply_admitted_rows(state: ServerState, delta_stack, weights, count,
+                        staleness_max, staleness_sum=0.0) -> ServerState:
     """Serving-window overload of :func:`apply_buffered_rows`.
 
     Same fused stacked apply, but the incoming state is NOT donated: the
@@ -197,8 +201,8 @@ def apply_admitted_rows(state: Dict, delta_stack, weights, count,
                                         mode=mode)
 
 
-def staleness_stats(state: Dict) -> Dict:
-    t = jnp.maximum(state["t"].astype(jnp.float32), 1.0)
-    return {"mean_staleness": state["staleness_sum"] / t,
-            "max_staleness": state["staleness_max"],
-            "server_rounds": state["t"]}
+def staleness_stats(state: ServerState) -> Dict:
+    t = jnp.maximum(state.t.astype(jnp.float32), 1.0)
+    return {"mean_staleness": state.staleness_sum / t,
+            "max_staleness": state.staleness_max,
+            "server_rounds": state.t}

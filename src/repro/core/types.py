@@ -1,7 +1,12 @@
-"""PersA-FL hyper-parameter container (Algorithms 1 & 2 of the paper)."""
+"""PersA-FL typed containers: the hyper-parameter config (Algorithms 1 & 2)
+and the server-state pytree (Algorithm 1's (w, t) + Assumption 1's staleness
+accounting)."""
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
+
+import jax
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,3 +46,49 @@ class PersAFLConfig:
         return {"A": "none", "B": f"1 SGD step @ alpha={self.alpha}",
                 "C": f"{self.inner_steps} prox steps @ lambda={self.lam}"}[
                     self.option]
+
+
+@dataclasses.dataclass
+class ServerState:
+    """Algorithm 1's server state as a typed, pytree-registered dataclass.
+
+    Fields: the global model ``params`` (w), the version counter ``t``, and
+    Assumption 1's staleness accounting (Σ τ, max τ) over applied updates.
+    Registered as a jax pytree, so instances flow through jit/donation/
+    ``jax.tree.map`` exactly like the raw dict they replace — one typed
+    state object end-to-end (engine applies, serving DeltaRing snapshots,
+    checkpoint store).
+
+    Dict-style reads (``state["params"]``) are kept as a thin compatibility
+    affordance for pre-PR-4 call sites; new code should use attributes.
+    """
+    params: Any
+    t: Any
+    staleness_sum: Any
+    staleness_max: Any
+
+    # -- legacy dict-style access (the raw-dict era's spelling) -----------
+    def __getitem__(self, key: str):
+        return getattr(self, key)
+
+    def keys(self):
+        return (f.name for f in dataclasses.fields(self))
+
+    def as_dict(self) -> dict:
+        """Shallow field dict (leaves NOT copied) — checkpoint layout."""
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    @classmethod
+    def from_dict(cls, d) -> "ServerState":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+    def replace(self, **kw) -> "ServerState":
+        return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_pytree_node(
+    ServerState,
+    lambda s: ((s.params, s.t, s.staleness_sum, s.staleness_max), None),
+    lambda _, children: ServerState(*children),
+)

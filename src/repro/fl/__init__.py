@@ -1,6 +1,8 @@
 from repro.fl.delays import DelayModel                       # noqa: F401
 from repro.fl.engine import CohortEngine, DeltaBank           # noqa: F401
+from repro.fl.api import (ApplyPolicy, FLRun, History,        # noqa: F401
+                          Strategy, buffered, immediate, register_strategy,
+                          strategy, strategy_names, sync_barrier)
 from repro.fl.simulator import (AsyncSimulator,               # noqa: F401
-                                BufferedAsyncSimulator, History,
-                                SyncSimulator)
+                                BufferedAsyncSimulator, SyncSimulator)
 from repro.fl.evaluate import make_personalized_eval          # noqa: F401

@@ -1,8 +1,16 @@
-"""Baseline local-update rules the paper compares against (§5):
+"""Baseline local-update rules the paper compares against (§5) — the pure
+per-client math behind the registry strategies of :mod:`repro.fl.api`.
 
-FedAvg / FedAsync / Per-FedAvg / pFedMe reuse Algorithm 2's Options A/B/C.
+FedAvg / FedAsync / Per-FedAvg / pFedMe reuse Algorithm 2's Options A/B/C
+(``strategy("fedavg")`` etc. are option presets of ``PersAFLStrategy``).
 FedProx and SCAFFOLD (Option I) need bespoke local steps, implemented here
-with the same scanned-delta structure as ``repro.core.client``.
+with the same scanned-delta structure as ``repro.core.client`` and wrapped
+by ``strategy("fedprox", mu=...)`` / ``strategy("scaffold")``.  Since PR 4
+both run *through the cohort engine* — vmapped over the cohort axis with
+SCAFFOLD's control variates threaded as a stacked client-state pytree —
+rather than the old sequential per-client jit loop; these functions stay
+jit-traceable with every non-pytree argument static-free for exactly that
+reason.
 """
 from __future__ import annotations
 

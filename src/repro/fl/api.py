@@ -1,0 +1,698 @@
+"""Declarative Strategy/Scheduler API: one run surface for simulation,
+baselines, and serving (PR 4 tentpole).
+
+The paper's Options A/B/C and its §5 baselines (Per-FedAvg, pFedMe, FedProx,
+SCAFFOLD) are all "a local update rule plus a server apply policy".  This
+module makes that factoring literal:
+
+  * :class:`Strategy` — the local update rule.  ``init_client_state(params)``
+    and ``local_update(params, batches, cstate) -> (delta, cstate, metrics)``;
+    instances come from the registry (``strategy("fedprox", mu=0.1)``,
+    ``strategy("persafl", option="B")``, …).  Client state is a *stacked
+    pytree threaded through the cohort vmap/shard_map*, so stateful
+    baselines (SCAFFOLD control variates) ride the exact same
+    :class:`repro.fl.engine.CohortEngine` fast path as everyone else and
+    their deltas land in the on-device DeltaBank.
+  * :class:`ApplyPolicy` — the server apply schedule.  ``immediate()`` is
+    Algorithm 1's paper-faithful per-arrival apply, ``buffered(M)`` the
+    FedBuff-style M-deltas-per-round flush consumed straight from the bank
+    through the fused ``apply_rows`` weight vector, ``sync_barrier(m)``
+    FedAvg-family rounds that wait for the slowest of m sampled clients.
+  * :class:`FLRun` — the one event-loop core replacing the three legacy
+    simulator classes.  Strategy and schedule compose freely:
+    ``FLRun(strategy="scaffold", schedule=sync_barrier(10), ...)`` is the
+    old ``SyncSimulator(algo="scaffold")``;
+    ``FLRun(strategy=strategy("persafl", option="C"),
+    schedule=buffered(8), ...)`` is the old ``BufferedAsyncSimulator``.
+    All schedules share the History / active-ratio / staleness bookkeeping
+    and the typed :class:`repro.core.ServerState`.
+
+Every new strategy automatically inherits the DeltaBank / ``apply_rows`` /
+shard_map machinery — register it once and it runs under all three
+schedules, the benchmarks, and (stateless ones) the serving micro-batcher.
+
+The legacy class names (``AsyncSimulator``, ``BufferedAsyncSimulator``,
+``SyncSimulator``) survive one release as deprecation shims in
+:mod:`repro.fl.simulator`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PersAFLConfig, admission_weights,
+                        apply_buffered_rows, apply_update, client_update,
+                        init_server_state, split_batches_for_option)
+from repro.core.moreau import solve_prox
+from repro.core.server import staleness_stats
+from repro.data.federated import sample_batches
+from repro.fl.algorithms import fedprox_update, scaffold_update
+from repro.fl.engine import CohortEngine, DeltaBank
+
+
+@dataclasses.dataclass
+class History:
+    """Run trace shared by every schedule: accuracy-vs-simulated-time,
+    active-client ratio on a time grid (paper Figure 2a), and per-applied-
+    update staleness (Assumption 1 bookkeeping; empty for sync rounds)."""
+    times: List[float] = dataclasses.field(default_factory=list)
+    rounds: List[int] = dataclasses.field(default_factory=list)
+    acc: List[float] = dataclasses.field(default_factory=list)
+    active_times: List[float] = dataclasses.field(default_factory=list)
+    active_ratio: List[float] = dataclasses.field(default_factory=list)
+    staleness: List[int] = dataclasses.field(default_factory=list)
+    # simulated time at which the run actually stopped (the event loop's
+    # final `now`) — NOT the 5s-grid-quantized last active_times entry;
+    # equal-simulated-time comparisons must budget on this
+    end_time: float = 0.0
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _own_copy(params):
+    """Private copy of the caller's params: server applies donate the old
+    buffer (in-place on TPU), which must never invalidate caller arrays."""
+    return jax.tree.map(lambda x: jnp.array(x), params)
+
+
+# ---------------------------------------------------------------------------
+# Strategy protocol + registry
+# ---------------------------------------------------------------------------
+
+class Strategy:
+    """A local update rule with a client-state lifecycle.
+
+    Protocol (all jit-traceable in ``local_update``):
+
+      * ``init_client_state(params)`` — the per-client state carried across
+        rounds (None for stateless rules; SCAFFOLD returns its control
+        variate c_i).
+      * ``local_update(params, batches, cstate) -> (delta, cstate, metrics)``
+        — one client's contribution against a frozen params snapshot.  The
+        delta is params-shaped f32 (bank-row compatible); metrics are
+        dead-code-eliminated on the cohort path.
+      * ``dispatch_state(cstate)`` — host-side hook run right before a
+        cohort dispatch (per-client pre-processing; identity by default).
+      * ``shared_state()`` / ``assemble_state(cstate, shared)`` — the
+        strategy-shared server-side input.  ``shared_state()`` is read once
+        per cohort call and passed *replicated* (vmap in-axis None /
+        shard_map ``P()``), and ``assemble_state`` recombines it with each
+        client's row inside the traced cohort body — SCAFFOLD ships ONE
+        c_global per call instead of one copy per cohort row.
+      * ``post_round(updates, n_clients)`` — host-side hook run after the
+        cohort's states are written back; ``updates`` is
+        ``[(client_index, old_cstate, new_cstate), ...]`` in dispatch
+        order (SCAFFOLD folds Δc into c_global here).
+
+    Instances are single-run objects: :meth:`bind` attaches the run's
+    (pcfg, loss_fn) and resets any strategy-shared state.
+    """
+
+    name = "strategy"
+    option = "A"        # batch-split layout, for introspection
+    stateful = False
+
+    def bind(self, pcfg: PersAFLConfig, loss_fn: Callable) -> "Strategy":
+        self.pcfg = pcfg
+        self.loss_fn = loss_fn
+        return self
+
+    def init_client_state(self, params):
+        return None
+
+    def dispatch_state(self, cstate):
+        return cstate
+
+    def shared_state(self):
+        """Strategy-shared cohort input, replicated (not stacked) across
+        the cohort axis; None for strategies without one."""
+        return None
+
+    def assemble_state(self, cstate, shared):
+        """Recombine one client's state row with the shared input inside
+        the traced cohort body (identity for shared-less strategies)."""
+        return cstate
+
+    def local_update(self, params, batches, cstate):
+        raise NotImplementedError
+
+    def post_round(self, updates: List[Tuple[int, object, object]],
+                   n_clients: int) -> None:
+        pass
+
+
+_REGISTRY: Dict[str, Callable[..., Strategy]] = {}
+
+
+def register_strategy(*names):
+    """Class decorator: ``@register_strategy("fedprox")`` makes the rule
+    constructible as ``strategy("fedprox", **kw)`` everywhere — FLRun, the
+    benchmarks, and the serving micro-batcher."""
+    def deco(factory):
+        for nm in names:
+            _REGISTRY[nm] = factory
+        return factory
+    return deco
+
+
+def strategy(name: str, **kw) -> Strategy:
+    """Construct a registered strategy: ``strategy("persafl", option="B")``,
+    ``strategy("fedprox", mu=0.1)``, ``strategy("scaffold")``, …"""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown strategy {name!r}; "
+                         f"have {sorted(_REGISTRY)}") from None
+    return factory(**kw)
+
+
+def strategy_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_strategy(s) -> Strategy:
+    if isinstance(s, str):
+        return strategy(s)
+    if isinstance(s, Strategy):
+        return s
+    raise TypeError(f"strategy must be a name or a Strategy, got {type(s)}")
+
+
+@register_strategy("persafl")
+class PersAFLStrategy(Strategy):
+    """Algorithm 2, Options A/B/C (this paper): Q local steps of plain SGD
+    (A), MAML (B, Per-FedAvg's rule) or Moreau-envelope prox grads (C,
+    pFedMe's rule).  ``option=None`` takes the bound pcfg's option."""
+
+    name = "persafl"
+
+    def __init__(self, option: Optional[str] = None):
+        self._option = option
+
+    def bind(self, pcfg, loss_fn):
+        self.option = self._option or pcfg.option
+        return super().bind(dataclasses.replace(pcfg, option=self.option),
+                            loss_fn)
+
+    def local_update(self, params, batches_3q, cstate):
+        delta, metrics = client_update(
+            self.pcfg, self.loss_fn, params,
+            split_batches_for_option(self.option, batches_3q))
+        return delta, None, metrics
+
+
+# the §5 baseline names are option presets of the same rule
+for _nm, _opt in (("fedavg", "A"), ("fedasync", "A"),
+                  ("perfedavg", "B"), ("pfedme", "C")):
+    _REGISTRY[_nm] = functools.partial(PersAFLStrategy, option=_opt)
+
+
+@register_strategy("fedprox")
+class FedProxStrategy(Strategy):
+    """FedProx [42]: local SGD on f_i(w) + μ/2 ‖w − w^t‖² (Option A
+    batches).  Stateless; formerly exiled to a sequential per-client jit
+    loop in SyncSimulator, now a plain cohort citizen."""
+
+    name = "fedprox"
+
+    def __init__(self, mu: float = 0.1):
+        self.mu = mu
+
+    def bind(self, pcfg, loss_fn):
+        return super().bind(dataclasses.replace(pcfg, option="A"), loss_fn)
+
+    def local_update(self, params, batches_3q, cstate):
+        q = self.pcfg.q_local
+        delta, metrics = fedprox_update(
+            self.pcfg, self.loss_fn, params,
+            jax.tree.map(lambda x: x[:q], batches_3q), mu=self.mu)
+        return delta, None, metrics
+
+
+@register_strategy("scaffold")
+class ScaffoldStrategy(Strategy):
+    """SCAFFOLD [34] (Option I): the first *stateful* registry strategy.
+
+    Per-client state is the control variate c_i (params-shaped f32,
+    stacked over the cohort axis); the shared c_global is injected into
+    every dispatch via :meth:`dispatch_state` and updated host-side in
+    :meth:`post_round` — c_global += (c_i⁺ − c_i)/n per participating
+    client, in dispatch order (the legacy sequential path's exact fold).
+    """
+
+    name = "scaffold"
+    stateful = True
+
+    def bind(self, pcfg, loss_fn):
+        self.c_global = None
+        return super().bind(dataclasses.replace(pcfg, option="A"), loss_fn)
+
+    def init_client_state(self, params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        if self.c_global is None:
+            self.c_global = zeros
+        return zeros
+
+    def shared_state(self):
+        return self.c_global
+
+    def assemble_state(self, cstate, shared):
+        return {"c": shared, "c_i": cstate}
+
+    def local_update(self, params, batches_3q, dstate):
+        q = self.pcfg.q_local
+        delta, c_new, metrics = scaffold_update(
+            self.pcfg, self.loss_fn, params,
+            jax.tree.map(lambda x: x[:q], batches_3q),
+            dstate["c"], dstate["c_i"])
+        return delta, c_new, metrics
+
+    def post_round(self, updates, n_clients):
+        for _, c_old, c_new in updates:
+            self.c_global = jax.tree.map(
+                lambda cg, cn, co: cg + (cn - co) / n_clients,
+                self.c_global, c_new, c_old)
+
+
+@register_strategy("personalize")
+class PersonalizeStrategy(Strategy):
+    """Serving-side personalization delta (head = w − delta).
+
+    mode "B": delta = α ∇f(w; D)   (head = the one-step MAML fine-tune)
+    mode "C": delta = w − θ̃(w)     (head = the Moreau prox solution θ̃)
+
+    ``batches`` here is the user's raw request batch (no leading-Q axis).
+    Deltas accumulate in f32 like training deltas, so bank rows are
+    directly consumable by the fused ``apply_rows`` server pass — this is
+    the strategy behind :class:`repro.serving.PersonalizationServer`,
+    replacing the old ``CohortEngine(client_fn=...)`` override.
+    """
+
+    name = "personalize"
+
+    def __init__(self, mode: str = "C"):
+        if mode not in ("B", "C"):
+            raise ValueError(f"unknown personalization mode {mode!r}; "
+                             f"have ('B', 'C')")
+        self.mode = mode
+        self.option = mode
+
+    def local_update(self, params, batch, cstate):
+        if self.mode == "B":
+            g = jax.grad(self.loss_fn)(params, batch)
+            delta = jax.tree.map(
+                lambda gg: self.pcfg.alpha * gg.astype(jnp.float32), g)
+        else:
+            theta, _ = solve_prox(self.loss_fn, params, batch,
+                                  self.pcfg.lam, self.pcfg.inner_eta,
+                                  self.pcfg.inner_steps)
+            delta = jax.tree.map(
+                lambda w, t: w.astype(jnp.float32) - t.astype(jnp.float32),
+                params, theta)
+        return delta, None, {}
+
+
+# ---------------------------------------------------------------------------
+# Apply policies (server schedules)
+# ---------------------------------------------------------------------------
+
+class ApplyPolicy:
+    """Server apply schedule.  ``kind="event"`` policies plug into the
+    async discrete-event loop via :meth:`on_upload`; ``kind="round"``
+    policies drive barrier rounds.  Instances hold per-run state — create
+    one per FLRun."""
+
+    kind = "event"
+    default_eval_every = 50
+
+    def start(self, run: "FLRun") -> None:
+        """Reset per-run policy state (called at the top of ``run()``)."""
+
+    def on_upload(self, run: "FLRun", now: float, rid: int, version: int,
+                  hist: History, eval_fn, eval_every: int) -> None:
+        raise NotImplementedError
+
+
+class Immediate(ApplyPolicy):
+    """Paper-faithful Algorithm 1: apply each delta the moment it lands
+    (staleness τ measured per update)."""
+
+    def on_upload(self, run, now, rid, version, hist, eval_fn, eval_every):
+        run._flush()
+        bank, idx = run._computed.pop(rid)
+        # per-row host materialization keeps exact single-delta semantics
+        # (one transfer of the whole bank, numpy views per row after that)
+        delta = bank.row(idx)
+        # _t mirrors state.t host-side: reading the device scalar every
+        # event would force a sync per event — O(n) stalls per window
+        staleness = run._t - version
+        hist.staleness.append(staleness)
+        run.state = apply_update(run.state, delta, run.pcfg.beta, staleness,
+                                 damping=run.pcfg.staleness_damping)
+        run._t += 1
+        if eval_fn is not None and run._t % eval_every == 0:
+            hist.times.append(now)
+            hist.rounds.append(run._t)
+            hist.acc.append(float(eval_fn(run.state.params)))
+
+
+class Buffered(ApplyPolicy):
+    """FedBuff-style buffered apply (beyond-paper [51,63]): arrivals
+    accumulate in a size-M buffer; a full buffer flushes as ONE
+    w ← w − β/M ΣΔ server round consumed straight from the on-device
+    DeltaBank through the fused ``apply_rows`` weight vector (β/M,
+    per-delta FedAsync damping ``(1+τ)^{-a}`` and padding masks are rows
+    of one ``[bucket]`` array) — flushes never move per-client deltas to
+    the host.  t advances in M-sized jumps; staleness Σ/max are accounted
+    per contributing delta."""
+
+    def __init__(self, m: Optional[int] = None):
+        self.m = m                # configured; None = the run's pcfg M
+
+    def start(self, run):
+        # resolved per run — m=None must re-read each run's buffer_size
+        self.m_effective = self.m if self.m is not None \
+            else max(int(run.pcfg.buffer_size), 1)
+        self._buffer: List[Tuple[int, int]] = []  # (rid, staleness)
+
+    def on_upload(self, run, now, rid, version, hist, eval_fn, eval_every):
+        staleness = run._t - version
+        hist.staleness.append(staleness)
+        self._buffer.append((rid, staleness))
+        if len(self._buffer) < self.m_effective:
+            return
+        run._flush()  # compute buffered AND in-flight pending deltas
+        m = len(self._buffer)
+        damping = run.pcfg.staleness_damping
+        # group the buffer's rows by owning DeltaBank (in-flight clients
+        # were computed in an earlier window's bank) and consume each bank
+        # on device: β/M and the per-delta FedAsync discount (1+τ)^{-a} —
+        # which must act BEFORE the sum, a post-sum scale could not tell
+        # fresh deltas from stale ones — are rows of ONE weight vector,
+        # and the whole flush is one fused apply_rows pass per bank
+        # instead of M host-side tree.maps.
+        groups: Dict[int, Tuple[DeltaBank, List[Tuple[int, int]]]] = {}
+        for r, s in self._buffer:
+            bank, idx = run._computed.pop(r)
+            groups.setdefault(id(bank), (bank, []))[1].append((idx, s))
+        t_old = run._t
+        for bank, rows in groups.values():
+            weights = admission_weights(bank.capacity, rows,
+                                        beta=run.pcfg.beta, count=m,
+                                        damping=damping)
+            run.state = apply_buffered_rows(
+                run.state, bank.stacked, weights, len(rows),
+                staleness_max=max(s for _, s in rows),
+                staleness_sum=float(sum(s for _, s in rows)))
+        self._buffer = []
+        run._t = t_old + m
+        # t jumps by M per flush: eval whenever a multiple of eval_every
+        # is crossed (the immediate-apply modulo test would skip most)
+        if eval_fn is not None \
+                and run._t // eval_every > t_old // eval_every:
+            hist.times.append(now)
+            hist.rounds.append(run._t)
+            hist.acc.append(float(eval_fn(run.state.params)))
+
+
+class SyncBarrier(ApplyPolicy):
+    """FedAvg-family synchronous rounds: sample m clients, wait for the
+    slowest, fold the cohort's bank into the params with one fused
+    ``apply_rows`` pass (weights = β/m on real rows, 0 on padding)."""
+
+    kind = "round"
+    default_eval_every = 5
+
+    def __init__(self, m: int = 10):
+        self.m = m
+
+
+def immediate() -> Immediate:
+    return Immediate()
+
+
+def buffered(m: Optional[int] = None) -> Buffered:
+    """``m=None`` takes ``pcfg.buffer_size`` at run time."""
+    return Buffered(m)
+
+
+def sync_barrier(m: int = 10) -> SyncBarrier:
+    return SyncBarrier(m)
+
+
+_SCHEDULES: Dict[str, Callable[[], ApplyPolicy]] = {
+    "immediate": immediate, "buffered": buffered,
+    "sync": sync_barrier, "sync_barrier": sync_barrier,
+}
+
+
+def resolve_schedule(s) -> ApplyPolicy:
+    if isinstance(s, str):
+        try:
+            return _SCHEDULES[s]()
+        except KeyError:
+            raise ValueError(f"unknown schedule {s!r}; "
+                             f"have {sorted(_SCHEDULES)}") from None
+    if isinstance(s, ApplyPolicy):
+        return s
+    raise TypeError(f"schedule must be a name or an ApplyPolicy, "
+                    f"got {type(s)}")
+
+
+# ---------------------------------------------------------------------------
+# FLRun — the one event-loop core
+# ---------------------------------------------------------------------------
+
+class FLRun:
+    """One federated run = a Strategy × an ApplyPolicy × a DelayModel.
+
+    Replaces AsyncSimulator / BufferedAsyncSimulator / SyncSimulator with a
+    single core sharing the engine dispatch, the typed
+    :class:`repro.core.ServerState`, and the History / active-ratio /
+    staleness bookkeeping.  Per-client compute is *deferred* exactly as
+    before: batches are recorded when a download completes and materialized
+    lazily — in one :class:`CohortEngine` cohort call, client state stacked
+    alongside — right before the next server apply, so every delta is
+    computed on the snapshot the per-event path would have used.
+
+    ``vectorized=False`` keeps the per-event sequential dispatch (the
+    baseline the ``engine`` benchmark row measures against).
+    """
+
+    def __init__(self, *, clients: List, loss_fn: Callable, init_params,
+                 pcfg: PersAFLConfig, delays,
+                 strategy="persafl", schedule="immediate",
+                 batch_size: int = 32, seed: int = 0,
+                 vectorized: bool = True, cohort_impl: str = "auto"):
+        self.clients = clients
+        self.pcfg = pcfg
+        self.delays = delays
+        self.batch_size = batch_size
+        self.rng = np.random.RandomState(seed)
+        self.loss_fn = loss_fn
+        self.strategy = resolve_strategy(strategy).bind(pcfg, loss_fn)
+        self.schedule = resolve_schedule(schedule)
+        self.state = init_server_state(_own_copy(init_params))
+        self.engine = CohortEngine(self.strategy.pcfg, loss_fn,
+                                   vectorized=vectorized,
+                                   cohort_impl=cohort_impl,
+                                   strategy=self.strategy)
+        self._cstates: List = [None] * len(clients)
+        self.final_stats: Optional[Dict] = None
+
+    # -- shared plumbing ---------------------------------------------------
+
+    @property
+    def params(self):
+        """The current global model w."""
+        return self.state.params
+
+    def _sample(self, i: int):
+        return sample_batches(self.clients[i], self.rng,
+                              3 * self.pcfg.q_local, self.batch_size)
+
+    def _cstate_for_dispatch(self, i: int):
+        if not self.strategy.stateful:
+            return None
+        if self._cstates[i] is None:
+            self._cstates[i] = self.strategy.init_client_state(
+                self.state.params)
+        return self.strategy.dispatch_state(self._cstates[i])
+
+    def _write_back(self, client_ids: List[int], bank: DeltaBank) -> None:
+        """Store the cohort's updated client states and run the strategy's
+        shared-state fold (SCAFFOLD's c_global)."""
+        if not self.strategy.stateful:
+            return
+        updates = []
+        for row, i in enumerate(client_ids):
+            new = bank.client_state(row)
+            updates.append((i, self._cstates[i], new))
+            self._cstates[i] = new
+        self.strategy.post_round(updates, len(self.clients))
+
+    def _flush(self) -> None:
+        """Materialize every pending client update in one cohort call.
+
+        Called right before any server apply: params have not changed since
+        these clients' downloads completed, so the whole cohort shares one
+        snapshot and the cohort call is exact.  Deltas are recorded as
+        (DeltaBank, row) handles — the stacked buffer stays on device and a
+        bank outlives its window for clients whose upload lands after the
+        next apply."""
+        if not self._pending:
+            return
+        stateful = self.strategy.stateful
+        bank = self.engine.update_cohort(
+            self.state.params, [b for _, _, b, _ in self._pending],
+            cstate_list=[c for _, _, _, c in self._pending]
+            if stateful else None)
+        for idx, (rid, _, _, _) in enumerate(self._pending):
+            self._computed[rid] = (bank, idx)
+        if stateful:
+            self._write_back([i for _, i, _, _ in self._pending], bank)
+        self._pending = []
+
+    def _on_upload(self, now: float, rid: int, version: int, hist: History,
+                   eval_fn, eval_every: int) -> None:
+        self.schedule.on_upload(self, now, rid, version, hist, eval_fn,
+                                eval_every)
+
+    # -- the run surface ---------------------------------------------------
+
+    def run(self, *, max_rounds: Optional[int] = None,
+            max_server_rounds: Optional[int] = None,
+            eval_every: Optional[int] = None,
+            eval_fn: Optional[Callable] = None,
+            record_active_every: float = 5.0,
+            max_time: Optional[float] = None) -> History:
+        """Drive the run to ``max_rounds`` server rounds (or ``max_time``
+        simulated seconds, whichever first).  ``max_server_rounds`` is an
+        accepted alias.  Returns the :class:`History`."""
+        if max_rounds is None:
+            max_rounds = max_server_rounds
+        if max_rounds is None:
+            raise TypeError("run() needs max_rounds=")
+        if eval_every is None:
+            eval_every = self.schedule.default_eval_every
+        self.schedule.start(self)
+        if self.schedule.kind == "round":
+            hist = self._run_rounds(max_rounds, eval_every, eval_fn,
+                                    record_active_every, max_time)
+        else:
+            hist = self._run_events(max_rounds, eval_every, eval_fn,
+                                    record_active_every, max_time)
+        self.final_stats = jax.tree.map(np.asarray,
+                                        staleness_stats(self.state))
+        return hist
+
+    # -- event-driven core (immediate / buffered schedules) ----------------
+
+    def _run_events(self, max_rounds, eval_every, eval_fn,
+                    record_active_every, max_time) -> History:
+        hist = History()
+        n = len(self.clients)
+        heap: List = []
+        seq = 0
+        # download requests start at t=0
+        for i in range(n):
+            t_done = self.delays.sample_download(i)
+            heapq.heappush(heap, (t_done, seq, "down_done", i, None))
+            seq += 1
+        now = 0.0
+        next_active_t = 0.0
+        busy_up = {i: None for i in range(n)}  # upload finish times
+        # (rid, client, batches, dispatch-ready cstate or None)
+        self._pending: List[Tuple[int, int, Dict, object]] = []
+        self._computed: Dict[int, Tuple] = {}   # rid -> (DeltaBank, row)
+        self._t = int(self.state.t)             # host-side round mirror
+        next_rid = 0
+
+        while self._t < max_rounds and heap:
+            now, _, kind, i, payload = heapq.heappop(heap)
+            if max_time is not None and now > max_time:
+                break
+            # record active ratio on a time grid: active = comp./uploading
+            while next_active_t <= now:
+                up_now = sum(1 for v in busy_up.values()
+                             if v is not None and v > next_active_t)
+                hist.active_times.append(next_active_t)
+                hist.active_ratio.append(up_now / n)
+                next_active_t += record_active_every
+            if kind == "down_done":
+                version = self._t
+                rid = next_rid
+                next_rid += 1
+                self._pending.append((rid, i, self._sample(i),
+                                      self._cstate_for_dispatch(i)))
+                t_up = now + self.delays.sample_upload(i)
+                busy_up[i] = t_up
+                heapq.heappush(heap, (t_up, seq, "up_done", i,
+                                      (rid, version)))
+                seq += 1
+            elif kind == "up_done":
+                rid, version = payload
+                self._on_upload(now, rid, version, hist, eval_fn,
+                                eval_every)
+                busy_up[i] = None
+                t_down = now + self.delays.sample_download(i)
+                heapq.heappush(heap, (t_down, seq, "down_done", i, None))
+                seq += 1
+        hist.end_time = now
+        return hist
+
+    # -- barrier-round core (sync_barrier schedule) ------------------------
+
+    def _run_rounds(self, max_rounds, eval_every, eval_fn,
+                    record_active_every, max_time) -> History:
+        hist = History()
+        n = len(self.clients)
+        m = self.schedule.m
+        now = 0.0
+        next_active_t = 0.0
+        for rnd in range(max_rounds):
+            sel = self.rng.choice(n, m, replace=False)
+            batches = [self._sample(int(i)) for i in sel]
+            cstates = [self._cstate_for_dispatch(int(i)) for i in sel] \
+                if self.strategy.stateful else None
+            # the m sampled clients share the round's params by definition:
+            # one cohort call, deltas land in the bank, client state rides
+            # the stacked pytree
+            bank = self.engine.update_cohort(self.state.params, batches,
+                                             cstate_list=cstates)
+            finish = [self.delays.sample_download(int(i))
+                      + self.delays.sample_upload(int(i)) for i in sel]
+            round_len = max(finish)
+            # active-ratio grid: client i is busy until its own finish time
+            while next_active_t <= now + round_len:
+                rel = next_active_t - now
+                busy = sum(1 for f in finish if f > rel)
+                hist.active_times.append(next_active_t)
+                hist.active_ratio.append(busy / n)
+                next_active_t += record_active_every
+            now += round_len
+            # the mean AND the β-scaled apply fuse into one apply_rows pass
+            # (weights = β/m on real rows, 0 on bucket padding); one server
+            # round per barrier, staleness 0 by construction
+            weights = np.zeros(bank.capacity, np.float32)
+            weights[:len(batches)] = self.pcfg.beta / len(batches)
+            self.state = apply_buffered_rows(self.state, bank.stacked,
+                                             weights, 1, staleness_max=0,
+                                             staleness_sum=0.0)
+            self._write_back([int(i) for i in sel], bank)
+            if eval_fn is not None and (rnd + 1) % eval_every == 0:
+                hist.times.append(now)
+                hist.rounds.append(rnd + 1)
+                hist.acc.append(float(eval_fn(self.state.params)))
+            if max_time is not None and now >= max_time:
+                break
+        hist.end_time = now
+        return hist

@@ -50,11 +50,28 @@ DeltaBank contract:
     ``apply_rows_tree``/``update_cohort_mean`` reduce it with a single
     on-device psum.
 
+Strategy contract (PR 4, ``repro.fl.api``):
+
+  * The local update rule is pluggable: pass a bound
+    :class:`repro.fl.api.Strategy` and the engine cohort-maps
+    ``strategy.local_update(params, batches, cstate)`` instead of the
+    built-in Algorithm-2 ``client_update``.  Stateful strategies (SCAFFOLD
+    control variates) thread a *stacked client-state pytree* through the
+    same vmap/lax.map/shard_map machinery: ``update_cohort(...,
+    cstate_list=...)`` stacks the per-client states along the cohort axis
+    and the returned bank carries the updated stack
+    (:meth:`DeltaBank.client_state`).  FedProx/SCAFFOLD are thereby
+    first-class cohort-engine citizens — their deltas land in the
+    DeltaBank like everyone else's.
+  * The pre-PR-4 ``client_fn=`` override is a deprecated alias for a
+    stateless strategy and will be removed next release.
+
 The per-event sequential path is kept behind ``vectorized=False`` as the
 baseline the ``engine`` benchmark row measures against.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -89,12 +106,17 @@ class DeltaBank:
     """
 
     def __init__(self, stacked=None, k: int = 0,
-                 stats: Optional[Dict] = None, rows: Optional[List] = None):
+                 stats: Optional[Dict] = None, rows: Optional[List] = None,
+                 cstates=None, cstate_rows: Optional[List] = None):
         self._stacked = stacked
         self._rows = rows          # per-event path: one delta tree per row
         self.k = k if rows is None else len(rows)
         self._stats = stats if stats is not None else {}
         self._host = None
+        # stateful-strategy runs: the updated per-client states, stacked
+        # along the same cohort axis (or one tree per row, per-event path)
+        self._cstates = cstates
+        self._cstate_rows = cstate_rows
 
     @property
     def capacity(self) -> int:
@@ -129,6 +151,17 @@ class DeltaBank:
             # where the bank was meant to shrink it
             self._stacked = None
         return jax.tree.map(lambda x: x[i], self._host)
+
+    def client_state(self, i: int):
+        """Row ``i``'s updated client state (stateful strategies only) — a
+        lazy device-side gather from the stacked state buffer; never a host
+        materialization."""
+        if self._cstate_rows is not None:
+            return self._cstate_rows[i]
+        if self._cstates is None:
+            raise ValueError("bank carries no client states "
+                             "(stateless strategy)")
+        return jax.tree.map(lambda x: x[i], self._cstates)
 
     def __len__(self) -> int:
         return self.k
@@ -168,7 +201,7 @@ class CohortEngine:
 
     def __init__(self, pcfg: PersAFLConfig, loss_fn: Callable, *,
                  vectorized: bool = True, cohort_impl: str = "auto",
-                 client_fn: Optional[Callable] = None):
+                 client_fn: Optional[Callable] = None, strategy=None):
         self.pcfg = pcfg
         self.loss_fn = loss_fn
         self.vectorized = vectorized
@@ -185,30 +218,63 @@ class CohortEngine:
         # knowing the ring exists.
         self._bank_hooks: List[Callable[[DeltaBank], None]] = []
 
-        if client_fn is None:
-            def _one(params, batches_3q):
-                batches = split_batches_for_option(pcfg.option, batches_3q)
+        self.strategy = strategy
+        self.stateful = bool(strategy is not None
+                             and getattr(strategy, "stateful", False))
+        if strategy is not None:
+            if client_fn is not None:
+                raise ValueError("pass strategy= or client_fn=, not both")
+
+            def _one(params, batches):
                 # metrics are dropped so XLA dead-code-eliminates the
                 # per-step norm reductions — schedulers only consume the
                 # delta
+                delta, _, _ = strategy.local_update(params, batches, None)
+                return delta
+
+            def _one_s(params, batches, cstate, shared):
+                # shared state (SCAFFOLD's c_global) is a separate
+                # REPLICATED input — one device copy per cohort call, not
+                # one per cohort row — recombined with the client's state
+                # row inside the traced body
+                delta, new_cstate, _ = strategy.local_update(
+                    params, batches,
+                    strategy.assemble_state(cstate, shared))
+                return delta, new_cstate
+        elif client_fn is not None:
+            warnings.warn(
+                "CohortEngine(client_fn=...) is deprecated; wrap the update "
+                "rule in a repro.fl.api.Strategy and pass strategy=...",
+                DeprecationWarning, stacklevel=2)
+            # legacy override: any (params, batch) -> params-shaped delta
+            # rides the same vmap/map/shard_map cohort machinery
+            _one = client_fn
+            _one_s = None
+        else:
+            def _one(params, batches_3q):
+                batches = split_batches_for_option(pcfg.option, batches_3q)
                 delta, _ = client_update(pcfg, loss_fn, params, batches)
                 return delta
-        else:
-            # serving override: any (params, batch) -> params-shaped delta
-            # (e.g. a one-step MAML fine-tune or a Moreau prox solve) rides
-            # the same vmap/map/shard_map cohort machinery
-            _one = client_fn
+            _one_s = None
 
         self._jit_one = jax.jit(_one)
+        self._jit_one_s = jax.jit(_one_s) if self.stateful else None
         self._ndev = 1
         self._jit_cohort_sum = None
+        self._jit_cohort_s = None
         donate = donate_argnums(1)
         if cohort_impl == "vmap":
             cohort_fn = lambda params, stacked: jax.vmap(  # noqa: E731
                 lambda b: _one(params, b))(stacked)
+            cohort_s_fn = lambda params, stacked, cstates, shared: \
+                jax.vmap(lambda b, c: _one_s(params, b, c,
+                                             shared))(stacked, cstates)
         elif cohort_impl == "map":
             cohort_fn = lambda params, stacked: jax.lax.map(  # noqa: E731
                 lambda b: _one(params, b), stacked)
+            cohort_s_fn = lambda params, stacked, cstates, shared: \
+                jax.lax.map(lambda bc: _one_s(params, bc[0], bc[1], shared),
+                            (stacked, cstates))
         elif cohort_impl == "shard_map":
             from jax.sharding import PartitionSpec as P
             self._mesh = cohort_mesh()
@@ -224,6 +290,23 @@ class CohortEngine:
                               jax.tree.map(lambda _: P("cohort"), stacked)),
                     out_specs=jax.tree.map(lambda _: P("cohort"), params),
                     manual_axes=("cohort",))(params, stacked)
+
+            def _shard_body_s(params, stacked, cstates, shared):
+                return jax.lax.map(
+                    lambda bc: _one_s(params, bc[0], bc[1], shared),
+                    (stacked, cstates))
+
+            def cohort_s_fn(params, stacked, cstates, shared):
+                # pytree-prefix specs: every leaf of the stacked batch /
+                # state buffers is split on the cohort axis, params and the
+                # shared state replicated; outputs (delta stack, cstate
+                # stack) come back cohort-sharded
+                return shard_map_compat(
+                    _shard_body_s, mesh=self._mesh,
+                    in_specs=(P(), P("cohort"), P("cohort"), P()),
+                    out_specs=(P("cohort"), P("cohort")),
+                    manual_axes=("cohort",))(params, stacked, cstates,
+                                             shared)
 
             def _sum_body(params, stacked, mask):
                 deltas = jax.lax.map(lambda b: _one(params, b), stacked)
@@ -248,6 +331,12 @@ class CohortEngine:
         else:
             raise ValueError(f"unknown cohort_impl {cohort_impl!r}")
         self._jit_cohort = jax.jit(cohort_fn, donate_argnums=donate)
+        if self.stateful:
+            # the stacked batch buffer is still donated; the stacked
+            # cstate input is NOT — its rows alias the caller's per-client
+            # state trees only through a fresh stack, but post_round hooks
+            # may still read the old trees
+            self._jit_cohort_s = jax.jit(cohort_s_fn, donate_argnums=donate)
 
     def add_bank_hook(self, fn: Callable[["DeltaBank"], None]) -> None:
         """Register a bank-handoff callback (serving ring retention, stats
@@ -279,8 +368,9 @@ class CohortEngine:
         padded = list(batch_list) + [batch_list[-1]] * (bucket - k)
         return _stack(padded), k, bucket
 
-    def update_cohort(self, params, batch_list: List) -> DeltaBank:
-        """Run ``client_update`` for every client in the cohort.
+    def update_cohort(self, params, batch_list: List,
+                      cstate_list: Optional[List] = None) -> DeltaBank:
+        """Run the local update rule for every client in the cohort.
 
         ``batch_list``: one 3Q-leading-dim batch pytree per client (the raw
         ``sample_batches`` output).  Returns a :class:`DeltaBank` over the
@@ -288,7 +378,15 @@ class CohortEngine:
         device; iterate / ``row(i)`` for host materialization.  All clients
         are computed against the same ``params`` — the caller guarantees no
         server apply happened inside the cohort's window.
+
+        Stateful strategies pass ``cstate_list`` — one dispatch-ready
+        client-state pytree per client, stacked along the cohort axis and
+        threaded through the same vmap/map/shard_map call; updated states
+        come back on the bank (:meth:`DeltaBank.client_state`).
         """
+        if self.stateful != (cstate_list is not None):
+            raise ValueError("cstate_list must be given exactly when the "
+                             "engine's strategy is stateful")
         k = len(batch_list)
         if k == 0:
             return self._emit(DeltaBank(rows=[], stats=self.stats))
@@ -296,9 +394,25 @@ class CohortEngine:
             self.stats["cohort_calls"] += 1
             self.stats["clients"] += k
             self.stats["max_cohort"] = max(self.stats["max_cohort"], k)
+            if cstate_list is not None:
+                shared = self.strategy.shared_state()
+                outs = [self._jit_one_s(params, b, c, shared)
+                        for b, c in zip(batch_list, cstate_list)]
+                return self._emit(DeltaBank(
+                    rows=[d for d, _ in outs], stats=self.stats,
+                    cstate_rows=[c for _, c in outs]))
             return self._emit(DeltaBank(rows=[self._jit_one(params, b)
                                               for b in batch_list],
                                         stats=self.stats))
+        if cstate_list is not None:
+            stacked, k, bucket = self._pad_stack(batch_list)
+            padded_cs = list(cstate_list) + \
+                [cstate_list[-1]] * (bucket - len(cstate_list))
+            cstacked = jax.tree.map(lambda *xs: jnp.stack(xs), *padded_cs)
+            deltas, new_cs = self._jit_cohort_s(
+                params, stacked, cstacked, self.strategy.shared_state())
+            return self._emit(DeltaBank(stacked=deltas, k=k,
+                                        stats=self.stats, cstates=new_cs))
         stacked, k, _ = self._pad_stack(batch_list)
         return self._emit(DeltaBank(stacked=self._jit_cohort(params,
                                                              stacked),

@@ -1,366 +1,122 @@
-"""Discrete-event federated-learning simulator.
+"""DEPRECATED simulator class names — thin shims over :mod:`repro.fl.api`.
 
-Reproduces the paper's §5 communication setup: n clients with random
-upload/download delays (upload 4–6× download), communication time dominating
-local compute.  The simulator drives the *same jitted client/server step
-functions* as the production launcher — only event ordering is simulated
-(DESIGN.md §2).
+PR 4 collapsed the three discrete-event simulators into the single
+:class:`repro.fl.api.FLRun` event-loop core: a registry
+:class:`~repro.fl.api.Strategy` (the local update rule — Options A/B/C,
+FedProx, SCAFFOLD, …) composed with an :class:`~repro.fl.api.ApplyPolicy`
+(the server schedule — ``immediate()`` / ``buffered(M)`` /
+``sync_barrier(m)``).  The names below survive one release for pre-PR-4
+call sites and emit :class:`DeprecationWarning` on construction; each is a
+*subclass* of FLRun, so every attribute (``state``, ``engine``, ``rng``,
+``delays``, ``final_stats``) and the History contract behave identically.
 
-Three schedulers:
-  * :class:`AsyncSimulator` — Algorithm 1: the server applies each client's
-    Δ the moment it arrives; staleness τ is measured per update.
-  * :class:`BufferedAsyncSimulator` — FedBuff-style [51,63]: arrivals are
-    buffered and M deltas are applied as one w ← w − β/M ΣΔ server round
-    (``PersAFLConfig.buffer_size``); staleness bookkeeping still counts
-    every contributing delta.
-  * :class:`SyncSimulator`  — FedAvg-family rounds: sample m clients, wait
-    for the slowest, apply the averaged Δ (supports FedAvg / Per-FedAvg /
-    pFedMe / FedProx / SCAFFOLD via ``algo``).
+Migration map::
 
-Execution engine: per-client compute is *deferred*.  A client's batches are
-recorded when its download completes and materialized lazily — in one
-:class:`repro.fl.engine.CohortEngine` cohort call — right before the next
-server apply.  Because params only change at applies, every delta is
-computed on exactly the snapshot the per-event path would have used, while
-the device sees one batched call per inter-apply window instead of one call
-per client (the win grows with ``buffer_size``: applies thin out, cohorts
-fatten up).  Each cohort call yields an on-device
-:class:`repro.fl.engine.DeltaBank`; buffered and sync applies reduce the
-stacked buffer with the fused ``apply_rows`` weight-vector pass (no
-per-client host transfer), while the paper-faithful immediate apply
-materializes single rows lazily and routes through the scalar fused-update
-op (one read-modify-write pass, traced scale).
+    AsyncSimulator(...)                    -> FLRun(..., schedule=immediate())
+    BufferedAsyncSimulator(..., buffer_size=M)
+                                           -> FLRun(..., schedule=buffered(M))
+    SyncSimulator(..., algo="fedprox", clients_per_round=m, fedprox_mu=mu)
+                                           -> FLRun(..., strategy=strategy(
+                                                  "fedprox", mu=mu),
+                                                  schedule=sync_barrier(m))
 
-All schedulers record the active-client ratio over time (paper Figure 2a)
-and accuracy-vs-simulated-time via a pluggable eval callback.
+FedProx and SCAFFOLD no longer take a sequential per-client jit loop: as
+registry strategies they run through the cohort engine (stacked client
+state, deltas in the on-device DeltaBank) like every other rule.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from typing import Callable, Dict, List, Optional, Tuple
+import warnings
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import (PersAFLConfig, admission_weights,
-                        apply_buffered_rows, apply_update, init_server_state)
-from repro.core.server import staleness_stats
-from repro.data.federated import ClientData, sample_batches
-from repro.fl.algorithms import fedprox_update, scaffold_update
-from repro.fl.delays import DelayModel
-from repro.fl.engine import CohortEngine, DeltaBank
-from repro.kernels.fused_update.ops import apply_delta_tree, apply_rows_tree
+from repro.fl.api import (FLRun, History, buffered,  # noqa: F401
+                          immediate, strategy, sync_barrier)
 
 
-@dataclasses.dataclass
-class History:
-    times: List[float] = dataclasses.field(default_factory=list)
-    rounds: List[int] = dataclasses.field(default_factory=list)
-    acc: List[float] = dataclasses.field(default_factory=list)
-    active_times: List[float] = dataclasses.field(default_factory=list)
-    active_ratio: List[float] = dataclasses.field(default_factory=list)
-    staleness: List[int] = dataclasses.field(default_factory=list)
-
-    def as_dict(self) -> Dict:
-        return dataclasses.asdict(self)
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.fl.simulator.{old} is deprecated and will be removed next "
+        f"release; use {new}", DeprecationWarning, stacklevel=3)
 
 
-def _own_copy(params):
-    """Private copy of the caller's params: server applies donate the old
-    buffer (in-place on TPU), which must never invalidate caller arrays."""
-    return jax.tree.map(lambda x: jnp.array(x), params)
+class AsyncSimulator(FLRun):
+    """DEPRECATED shim: PersA-FL / FedAsync immediate-apply runner.
 
-
-class AsyncSimulator:
-    """PersA-FL / FedAsync event-driven runner (Algorithms 1 & 2).
-
-    ``vectorized=False`` keeps the per-event sequential dispatch (the
-    baseline the ``engine`` benchmark row measures against).
+    Use ``FLRun(strategy="persafl", schedule=immediate(), ...)``.
     """
 
-    def __init__(self, *, clients: List[ClientData], loss_fn: Callable,
-                 init_params, pcfg: PersAFLConfig, delays: DelayModel,
+    def __init__(self, *, clients, loss_fn, init_params, pcfg, delays,
                  batch_size: int = 32, seed: int = 0,
                  vectorized: bool = True):
-        self.clients = clients
-        self.pcfg = pcfg
-        self.delays = delays
-        self.batch_size = batch_size
-        self.rng = np.random.RandomState(seed)
-        self.loss_fn = loss_fn
-        self.state = init_server_state(_own_copy(init_params))
-        self.engine = CohortEngine(pcfg, loss_fn, vectorized=vectorized)
+        _deprecated("AsyncSimulator",
+                    "repro.fl.api.FLRun(strategy='persafl', "
+                    "schedule=immediate())")
+        super().__init__(clients=clients, loss_fn=loss_fn,
+                         init_params=init_params, pcfg=pcfg, delays=delays,
+                         strategy="persafl", schedule=immediate(),
+                         batch_size=batch_size, seed=seed,
+                         vectorized=vectorized)
 
-    def _sample(self, i: int):
-        return sample_batches(self.clients[i], self.rng,
-                              3 * self.pcfg.q_local, self.batch_size)
-
-    # -- apply-side hook (overridden by BufferedAsyncSimulator) ------------
-
-    def _on_upload(self, now: float, rid: int, version: int, hist: History,
-                   eval_fn, eval_every: int) -> None:
-        """Paper-faithful Algorithm 1: apply the delta the moment it lands."""
-        self._flush()
-        bank, idx = self._computed.pop(rid)
-        # per-row host materialization keeps exact single-delta semantics
-        # (one transfer of the whole bank, numpy views per row after that)
-        delta = bank.row(idx)
-        # _t mirrors state["t"] host-side: reading the device scalar every
-        # event would force a sync per event — O(n) stalls per window
-        staleness = self._t - version
-        hist.staleness.append(staleness)
-        self.state = apply_update(self.state, delta, self.pcfg.beta,
-                                  staleness,
-                                  damping=self.pcfg.staleness_damping)
-        self._t += 1
-        if eval_fn is not None and self._t % eval_every == 0:
-            hist.times.append(now)
-            hist.rounds.append(self._t)
-            hist.acc.append(float(eval_fn(self.state["params"])))
-
-    def _flush(self) -> None:
-        """Materialize every pending client update in one cohort call.
-
-        Called right before any server apply: params have not changed since
-        these clients' downloads completed, so the whole cohort shares one
-        snapshot and the cohort call is exact.  Deltas are recorded as
-        (DeltaBank, row) handles — the stacked buffer stays on device and a
-        bank outlives its window for clients whose upload lands after the
-        next apply."""
-        if not self._pending:
-            return
-        bank = self.engine.update_cohort(
-            self.state["params"], [b for _, b in self._pending])
-        for idx, (rid, _) in enumerate(self._pending):
-            self._computed[rid] = (bank, idx)
-        self._pending = []
-
-    def run(self, *, max_server_rounds: int, eval_every: int = 50,
-            eval_fn: Optional[Callable] = None,
-            record_active_every: float = 5.0) -> History:
-        hist = History()
-        n = len(self.clients)
-        heap: List = []
-        seq = 0
-        # download requests start at t=0
-        for i in range(n):
-            t_done = self.delays.sample_download(i)
-            heapq.heappush(heap, (t_done, seq, "down_done", i, None))
-            seq += 1
-        now = 0.0
-        next_active_t = 0.0
-        busy_up = {i: None for i in range(n)}  # upload finish times
-        self._pending: List[Tuple[int, Dict]] = []  # (rid, batches)
-        self._computed: Dict[int, Tuple] = {}       # rid -> (DeltaBank, row)
-        self._t = int(self.state["t"])              # host-side round mirror
-        next_rid = 0
-
-        while self._t < max_server_rounds and heap:
-            now, _, kind, i, payload = heapq.heappop(heap)
-            # record active ratio on a time grid: active = computing/uploading
-            while next_active_t <= now:
-                up_now = sum(1 for v in busy_up.values()
-                             if v is not None and v > next_active_t)
-                hist.active_times.append(next_active_t)
-                hist.active_ratio.append(up_now / n)
-                next_active_t += record_active_every
-            if kind == "down_done":
-                version = self._t
-                rid = next_rid
-                next_rid += 1
-                self._pending.append((rid, self._sample(i)))
-                t_up = now + self.delays.sample_upload(i)
-                busy_up[i] = t_up
-                heapq.heappush(heap, (t_up, seq, "up_done", i,
-                                      (rid, version)))
-                seq += 1
-            elif kind == "up_done":
-                rid, version = payload
-                self._on_upload(now, rid, version, hist, eval_fn, eval_every)
-                busy_up[i] = None
-                t_down = now + self.delays.sample_download(i)
-                heapq.heappush(heap, (t_down, seq, "down_done", i, None))
-                seq += 1
-        self.final_stats = jax.tree.map(np.asarray,
-                                        staleness_stats(self.state))
-        return hist
+    def run(self, *, max_server_rounds: int, **kw) -> History:
+        return super().run(max_rounds=max_server_rounds, **kw)
 
 
-class BufferedAsyncSimulator(AsyncSimulator):
-    """FedBuff-style buffered asynchronous scheduler (beyond-paper [51,63]).
+class BufferedAsyncSimulator(FLRun):
+    """DEPRECATED shim: FedBuff-style buffered asynchronous scheduler.
 
-    Arrivals accumulate in a size-M buffer (``pcfg.buffer_size``); when full,
-    every still-pending client update is computed in ONE cohort call and the
-    buffer is applied as one w ← w − β/M ΣΔ server round, consumed straight
-    from the on-device DeltaBank through ``apply_rows`` — flushes never move
-    per-client deltas to the host (``engine.stats["host_materializations"]``
-    stays 0).  Between flushes the params are frozen, so cohorts grow to ≳M
-    clients — this is the scheduler the vectorized engine was built for.
-    Staleness Σ/max are accounted per contributing delta (Assumption 1
-    bookkeeping).
+    Use ``FLRun(strategy="persafl", schedule=buffered(M), ...)``.
+    """
 
-    Note: t advances in M-sized jumps, so a run stops at the first flush
-    that reaches ``max_server_rounds`` — the final t is the next multiple
-    of M (an overshoot bounded by M), like finishing a partial epoch."""
+    def __init__(self, *, clients, loss_fn, init_params, pcfg, delays,
+                 buffer_size: Optional[int] = None, batch_size: int = 32,
+                 seed: int = 0, vectorized: bool = True):
+        _deprecated("BufferedAsyncSimulator",
+                    "repro.fl.api.FLRun(strategy='persafl', "
+                    "schedule=buffered(M))")
+        super().__init__(clients=clients, loss_fn=loss_fn,
+                         init_params=init_params, pcfg=pcfg, delays=delays,
+                         strategy="persafl", schedule=buffered(buffer_size),
+                         batch_size=batch_size, seed=seed,
+                         vectorized=vectorized)
 
-    def __init__(self, *, buffer_size: Optional[int] = None, **kw):
-        super().__init__(**kw)
-        self.buffer_size = buffer_size or max(int(self.pcfg.buffer_size), 1)
-        self._buffer: List[Tuple[int, int]] = []  # (rid, staleness)
+    @property
+    def buffer_size(self) -> int:
+        m = getattr(self.schedule, "m_effective", self.schedule.m)
+        return m if m is not None else max(int(self.pcfg.buffer_size), 1)
 
-    def run(self, **kw) -> History:
-        self._buffer = []
-        return super().run(**kw)
-
-    def _on_upload(self, now: float, rid: int, version: int, hist: History,
-                   eval_fn, eval_every: int) -> None:
-        staleness = self._t - version
-        hist.staleness.append(staleness)
-        self._buffer.append((rid, staleness))
-        if len(self._buffer) < self.buffer_size:
-            return
-        self._flush()  # compute buffered AND in-flight pending deltas
-        m = len(self._buffer)
-        damping = self.pcfg.staleness_damping
-        # group the buffer's rows by owning DeltaBank (in-flight clients
-        # were computed in an earlier window's bank) and consume each bank
-        # on device: β/M and the per-delta FedAsync discount (1+τ)^{-a} —
-        # which must act BEFORE the sum, a post-sum scale could not tell
-        # fresh deltas from stale ones — are rows of ONE weight vector, and
-        # the whole flush is one fused apply_rows pass per bank instead of
-        # M host-side tree.maps.
-        groups: Dict[int, Tuple[DeltaBank, List[Tuple[int, int]]]] = {}
-        for r, s in self._buffer:
-            bank, idx = self._computed.pop(r)
-            groups.setdefault(id(bank), (bank, []))[1].append((idx, s))
-        t_old = self._t
-        for bank, rows in groups.values():
-            weights = admission_weights(bank.capacity, rows,
-                                        beta=self.pcfg.beta, count=m,
-                                        damping=damping)
-            self.state = apply_buffered_rows(
-                self.state, bank.stacked, weights, len(rows),
-                staleness_max=max(s for _, s in rows),
-                staleness_sum=float(sum(s for _, s in rows)))
-        self._buffer = []
-        self._t = t_old + m
-        # t jumps by M per flush: eval whenever a multiple of eval_every
-        # is crossed (the immediate-apply modulo test would skip most)
-        if eval_fn is not None \
-                and self._t // eval_every > t_old // eval_every:
-            hist.times.append(now)
-            hist.rounds.append(self._t)
-            hist.acc.append(float(eval_fn(self.state["params"])))
+    def run(self, *, max_server_rounds: int, **kw) -> History:
+        return super().run(max_rounds=max_server_rounds, **kw)
 
 
-class SyncSimulator:
-    """Synchronous rounds (FedAvg-family baselines, paper Figure 2).
+#: legacy ``algo`` string -> registry strategy spec
+_SYNC_ALGOS = ("fedavg", "perfedavg", "pfedme", "fedprox", "scaffold")
 
-    The m sampled clients of a round share the round's params by definition,
-    so fedavg/perfedavg/pfedme rounds run as one cohort-engine call;
-    fedprox/scaffold carry per-client control state and keep the sequential
-    path.  The server apply routes through the fused-update op."""
 
-    def __init__(self, *, clients: List[ClientData], loss_fn: Callable,
-                 init_params, pcfg: PersAFLConfig, delays: DelayModel,
+class SyncSimulator(FLRun):
+    """DEPRECATED shim: synchronous FedAvg-family rounds.
+
+    Use ``FLRun(strategy=strategy(algo, ...), schedule=sync_barrier(m))``.
+    """
+
+    def __init__(self, *, clients, loss_fn, init_params, pcfg, delays,
                  algo: str = "fedavg", clients_per_round: int = 10,
                  batch_size: int = 32, seed: int = 0,
                  fedprox_mu: float = 0.1, vectorized: bool = True):
-        self.clients = clients
-        self.pcfg = pcfg
-        self.delays = delays
+        if algo not in _SYNC_ALGOS:
+            raise KeyError(algo)
+        _deprecated("SyncSimulator",
+                    f"repro.fl.api.FLRun(strategy=strategy({algo!r}), "
+                    f"schedule=sync_barrier(m))")
         self.algo = algo
+        strat = strategy("fedprox", mu=fedprox_mu) if algo == "fedprox" \
+            else strategy(algo)
+        super().__init__(clients=clients, loss_fn=loss_fn,
+                         init_params=init_params, pcfg=pcfg, delays=delays,
+                         strategy=strat,
+                         schedule=sync_barrier(clients_per_round),
+                         batch_size=batch_size, seed=seed,
+                         vectorized=vectorized)
         self.m = clients_per_round
-        self.batch_size = batch_size
-        self.rng = np.random.RandomState(seed)
-        self.loss_fn = loss_fn
-        self.params = _own_copy(init_params)
-        if algo == "scaffold":
-            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                                 init_params)
-            self.c_global = zeros
-            self.c_clients = [zeros for _ in clients]
 
-        option = {"fedavg": "A", "perfedavg": "B", "pfedme": "C",
-                  "fedprox": "A", "scaffold": "A"}[algo]
-        pcfg_local = dataclasses.replace(pcfg, option=option)
-        self.pcfg_local = pcfg_local
-        self.engine = CohortEngine(pcfg_local, loss_fn,
-                                   vectorized=vectorized)
-
-        if algo == "fedprox":
-            self._jit = jax.jit(lambda p, b: fedprox_update(
-                pcfg_local, loss_fn, p,
-                jax.tree.map(lambda x: x[:pcfg.q_local], b), mu=fedprox_mu))
-        elif algo == "scaffold":
-            self._jit = jax.jit(lambda p, b, cg, ci: scaffold_update(
-                pcfg_local, loss_fn, p,
-                jax.tree.map(lambda x: x[:pcfg.q_local], b), cg, ci))
-
-    def run(self, *, max_rounds: int, eval_every: int = 5,
-            eval_fn: Optional[Callable] = None,
-            record_active_every: float = 5.0) -> History:
-        hist = History()
-        n = len(self.clients)
-        now = 0.0
-        next_active_t = 0.0
-        for rnd in range(max_rounds):
-            sel = self.rng.choice(n, self.m, replace=False)
-            batches = [sample_batches(self.clients[i], self.rng,
-                                      3 * self.pcfg.q_local, self.batch_size)
-                       for i in sel]
-            c_updates = []
-            if self.algo == "scaffold":
-                deltas = []
-                for i, b in zip(sel, batches):
-                    delta, c_new, _ = self._jit(self.params, b,
-                                                self.c_global,
-                                                self.c_clients[i])
-                    c_updates.append((i, c_new))
-                    deltas.append(delta)
-                mean_delta = jax.tree.map(lambda *xs: sum(xs) / len(xs),
-                                          *deltas)
-            elif self.algo == "fedprox":
-                deltas = [self._jit(self.params, b)[0] for b in batches]
-                mean_delta = jax.tree.map(lambda *xs: sum(xs) / len(xs),
-                                          *deltas)
-            else:
-                # engine-path rounds consume the DeltaBank on device: the
-                # mean AND the β-scaled apply fuse into one apply_rows pass
-                # (weights = β/m on real rows, 0 on bucket padding)
-                bank = self.engine.update_cohort(self.params, batches)
-                mean_delta = None
-            finish = [self.delays.sample_download(int(i))
-                      + self.delays.sample_upload(int(i)) for i in sel]
-            round_len = max(finish)
-            # active-ratio grid: client i is busy until its own finish time
-            while next_active_t <= now + round_len:
-                rel = next_active_t - now
-                busy = sum(1 for f in finish if f > rel)
-                hist.active_times.append(next_active_t)
-                hist.active_ratio.append(busy / n)
-                next_active_t += record_active_every
-            now += round_len
-            if mean_delta is not None:
-                self.params = apply_delta_tree(self.params, mean_delta,
-                                               jnp.float32(self.pcfg.beta))
-            else:
-                weights = np.zeros(bank.capacity, np.float32)
-                weights[:len(batches)] = self.pcfg.beta / len(batches)
-                self.params = apply_rows_tree(self.params, bank.stacked,
-                                              weights)
-            if self.algo == "scaffold":
-                for i, c_new in c_updates:
-                    old = self.c_clients[i]
-                    self.c_clients[i] = c_new
-                    self.c_global = jax.tree.map(
-                        lambda cg, cn, co: cg + (cn - co) / n,
-                        self.c_global, c_new, old)
-            if eval_fn is not None and (rnd + 1) % eval_every == 0:
-                hist.times.append(now)
-                hist.rounds.append(rnd + 1)
-                hist.acc.append(float(eval_fn(self.params)))
-        return hist
-
+    def run(self, *, max_rounds: int, **kw) -> History:
+        return super().run(max_rounds=max_rounds, **kw)

@@ -3,8 +3,9 @@
 Two modes:
   * ``--preset paper-mnist|paper-cifar`` — the paper's §5 experiment:
     asynchronous personalized FL over n heterogeneous clients with the
-    paper's CNNs, driven by the discrete-event simulator (the end-to-end
-    example; a few hundred server rounds on CPU).
+    paper's CNNs, driven by the ``repro.fl.api.FLRun`` event loop with the
+    paper-faithful ``immediate()`` apply schedule (the end-to-end example;
+    a few hundred server rounds on CPU).
   * ``--arch <id> [--smoke]`` — PersA-FL over an assigned LLM architecture
     (reduced config on CPU with --smoke; full config is what the dry-run
     lowers for the production mesh).
@@ -31,7 +32,7 @@ from repro.configs import get_config, reduce_for_smoke
 from repro.configs.paper_models import CIFAR_CNN, MNIST_CNN
 from repro.core import PersAFLConfig
 from repro.data import make_federated_dataset, synthetic_token_batch
-from repro.fl import AsyncSimulator, DelayModel, make_personalized_eval
+from repro.fl import DelayModel, FLRun, immediate, make_personalized_eval
 from repro.models import api
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
 
@@ -51,13 +52,13 @@ def run_paper_preset(args) -> dict:
                          beta=args.beta, alpha=args.alpha, lam=args.lam,
                          inner_steps=args.inner_steps,
                          maml_mode=args.maml_mode)
-    sim = AsyncSimulator(clients=clients, loss_fn=loss, init_params=params,
-                         pcfg=pcfg, delays=DelayModel(args.clients,
-                                                      seed=args.seed,
-                                                      scale=args.delay_scale),
-                         batch_size=args.batch, seed=args.seed)
+    sim = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                pcfg=pcfg, delays=DelayModel(args.clients, seed=args.seed,
+                                             scale=args.delay_scale),
+                strategy="persafl", schedule=immediate(),
+                batch_size=args.batch, seed=args.seed)
     t0 = time.time()
-    hist = sim.run(max_server_rounds=args.rounds,
+    hist = sim.run(max_rounds=args.rounds,
                    eval_every=args.eval_every, eval_fn=ev)
     wall = time.time() - t0
     out = {

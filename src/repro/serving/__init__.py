@@ -31,5 +31,6 @@ Parts:
 """
 from repro.serving.bank import DeltaRing                        # noqa: F401
 from repro.serving.batcher import (MODES, MicroBatcher, Ticket,  # noqa: F401
-                                   personalize_delta_fn)
+                                   personalize_delta_fn,
+                                   personalize_strategy)
 from repro.serving.server import PersonalizationServer           # noqa: F401

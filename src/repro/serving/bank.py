@@ -20,15 +20,23 @@ traffic arrives forever and the global model advances in aggregation
     outlive the apply (stragglers are computed against them).
 
 Persistence scope: the ring persists *across windows* (device residency, no
-host round-trip), not across process restarts — after a restart it is
-rebuilt empty from the checkpointed global params, in-flight straggler rows
-are lost, and users simply re-personalize against the fresh snapshot.
+host round-trip) AND — via :meth:`load` +
+``PersonalizationServer.save/restore`` through ``repro.checkpoint.store`` —
+its params snapshots and window counter survive process restarts.  What a
+restart still loses: in-flight straggler delta rows (their banks are
+device-only); affected users simply re-personalize against the restored
+snapshots.
+
+Fairness: ``user_cap`` bounds the delta rows one user may have admitted
+into a single window's apply (the ring is the admission authority; the
+micro-batcher's matching cap refuses over-cap requests pre-cohort).
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import admission_weights, apply_admitted_rows
+from repro.core.types import ServerState
 from repro.fl.engine import DeltaBank
 
 
@@ -43,7 +51,8 @@ class DeltaRing:
     """
 
     def __init__(self, params0, *, windows: int = 4,
-                 tau_max: Optional[int] = None):
+                 tau_max: Optional[int] = None,
+                 user_cap: Optional[int] = None):
         if windows < 1:
             raise ValueError("need at least one retained window")
         self.windows = windows
@@ -51,15 +60,18 @@ class DeltaRing:
         # so the staleness bound never exceeds the ring depth
         self.tau_max = min(tau_max, windows - 1) if tau_max is not None \
             else windows - 1
+        self.user_cap = user_cap
         self.current = 0
         self._snapshots: Dict[int, object] = {0: params0}
         self._banks: Dict[int, List[DeltaBank]] = {0: []}
         # (bank, row, τ) admitted to the window currently accumulating
         self._pending: List[Tuple[DeltaBank, int, int]] = []
+        # user -> rows admitted to the accumulating window (fairness cap)
+        self._user_rows: Dict[object, int] = {}
         # user -> (window, bank, row): the user's latest served delta row
         self._by_user: Dict[object, Tuple[int, DeltaBank, int]] = {}
         self.stats = {"windows": 0, "admitted": 0, "stragglers": 0,
-                      "dropped": 0}
+                      "dropped": 0, "fairness_capped": 0}
 
     # -- retention ---------------------------------------------------------
 
@@ -89,22 +101,28 @@ class DeltaRing:
         ``tau`` is the row's staleness in windows (0 = computed against the
         current snapshot).  Straggler rows (τ > 0) are re-weighted into
         THIS window — the "next" window relative to the one they were
-        stamped in — and rows past ``tau_max`` are refused.
+        stamped in — and rows past ``tau_max`` are refused, as is a user's
+        row past the per-window fairness cap (``user_cap``).
         """
         if tau > self.tau_max:
             self.stats["dropped"] += 1
             return False
+        if self.user_cap is not None \
+                and self._user_rows.get(user, 0) >= self.user_cap:
+            self.stats["fairness_capped"] += 1
+            return False
         if tau > 0:
             self.stats["stragglers"] += 1
         self.stats["admitted"] += 1
+        self._user_rows[user] = self._user_rows.get(user, 0) + 1
         self._pending.append((bank, row, tau))
         self._by_user[user] = (self.current, bank, row)
         return True
 
     # -- window boundary ---------------------------------------------------
 
-    def advance(self, state: Dict, *, beta: float,
-                damping: float = 0.0) -> Dict:
+    def advance(self, state: ServerState, *, beta: float,
+                damping: float = 0.0) -> ServerState:
         """Close the accumulating window: apply every admitted row to the
         server state and rotate the ring.
 
@@ -129,9 +147,10 @@ class DeltaRing:
                     staleness_max=max(t for _, t in rows),
                     staleness_sum=float(sum(t for _, t in rows)))
         self._pending = []
+        self._user_rows = {}
         self.stats["windows"] += 1
         self.current += 1
-        self._snapshots[self.current] = state["params"]
+        self._snapshots[self.current] = state.params
         self._banks[self.current] = []
         horizon = self.current - self.windows + 1
         for w in [w for w in self._snapshots if w < horizon]:
@@ -141,3 +160,24 @@ class DeltaRing:
                      if w < horizon]:
             del self._by_user[user]
         return state
+
+    # -- restart warm-start ------------------------------------------------
+
+    def load(self, snapshots: Dict[int, object], current: int) -> None:
+        """Warm-start after a process restart: install the checkpointed
+        params snapshots and window counter (see
+        ``PersonalizationServer.save``/``restore``).  Banks, pending
+        admissions and per-user delta rows start empty — in-flight
+        straggler rows do not survive a restart — but straggler *requests*
+        stamped before the crash can still drain against their restored
+        snapshots."""
+        if current not in snapshots:
+            raise ValueError(f"current window {current} has no snapshot")
+        horizon = current - self.windows + 1
+        self.current = current
+        self._snapshots = {w: s for w, s in snapshots.items()
+                           if w >= horizon}
+        self._banks = {w: [] for w in self._snapshots}
+        self._pending = []
+        self._user_rows = {}
+        self._by_user = {}

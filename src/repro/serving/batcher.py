@@ -3,12 +3,20 @@
 Batcher *modes* are the paper's personalization options (see the package
 docstring): mode ``"B"`` is the Per-FedAvg one-step MAML fine-tune, mode
 ``"C"`` the pFedMe Moreau-envelope prox solve.  Each mode owns a
-:class:`repro.fl.engine.CohortEngine` whose ``client_fn`` computes the
-*personalization delta* — a params-shaped pytree with
+:class:`repro.fl.engine.CohortEngine` driven by the registry strategy
+``repro.fl.api.strategy("personalize", mode=...)``, whose ``local_update``
+computes the *personalization delta* — a params-shaped pytree with
 ``head = w − delta`` — so concurrent users ride the exact vmap / lax.map /
 shard_map machinery (pow2 buckets, on-device DeltaBank) the training
 cohorts use, and the resulting bank rows double as the server-side update
-direction the ring folds back into the global model.
+direction the ring folds back into the global model.  (The pre-PR-4
+``CohortEngine(client_fn=...)`` override this replaced is deprecated.)
+
+Fairness: ``user_cap`` bounds how many of one user's rows are admitted per
+aggregation window, so users with unequal request rates cannot monopolize
+the window's ``apply_rows`` weight vector — over-cap requests are refused
+*before* spending a cohort slot (``status="capped"``; re-submit next
+window) and counted in ``stats["fairness_capped"]``.
 
 Under ``cohort_impl="shard_map"`` the batcher lays the cohort out
 *shard-major*: user ``u`` always occupies a slot in shard
@@ -21,44 +29,35 @@ layout adds no padding beyond what the engine would.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 import zlib
-from typing import Callable, Dict, Iterator, List, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.moreau import solve_prox
 from repro.core.types import PersAFLConfig
+from repro.fl.api import strategy as _strategy
 from repro.fl.engine import CohortEngine, DeltaBank
 
 MODES = ("B", "C")
 
 
+def personalize_strategy(pcfg: PersAFLConfig, loss_fn: Callable, mode: str):
+    """The bound ``strategy("personalize", mode=...)`` behind one batcher
+    mode — the registry rule whose ``local_update`` maps
+    ``(params, batch)`` to the personalization delta (head = w − delta)."""
+    return _strategy("personalize", mode=mode).bind(pcfg, loss_fn)
+
+
 def personalize_delta_fn(pcfg: PersAFLConfig, loss_fn: Callable,
                          mode: str) -> Callable:
-    """(params, batch) -> personalization delta, with head = w − delta.
-
-    mode "B": delta = α ∇f(w; D)      (head = the one-step fine-tune)
-    mode "C": delta = w − θ̃(w)        (head = the prox solution θ̃)
-    Deltas accumulate in f32 like training deltas, so bank rows are
-    directly consumable by the fused ``apply_rows`` server pass.
-    """
-    if mode == "B":
-        def fn(params, batch):
-            g = jax.grad(loss_fn)(params, batch)
-            return jax.tree.map(
-                lambda gg: pcfg.alpha * gg.astype(jnp.float32), g)
-    elif mode == "C":
-        def fn(params, batch):
-            theta, _ = solve_prox(loss_fn, params, batch, pcfg.lam,
-                                  pcfg.inner_eta, pcfg.inner_steps)
-            return jax.tree.map(
-                lambda w, t: w.astype(jnp.float32) - t.astype(jnp.float32),
-                params, theta)
-    else:
-        raise ValueError(f"unknown personalization mode {mode!r}; "
-                         f"have {MODES}")
-    return fn
+    """DEPRECATED: the raw (params, batch) -> delta callable of the
+    pre-strategy era.  Kept one release for external callers; internally
+    the modes run as registry strategies (:func:`personalize_strategy`)."""
+    warnings.warn(
+        "personalize_delta_fn is deprecated; use "
+        "repro.fl.api.strategy('personalize', mode=...) / "
+        "personalize_strategy instead", DeprecationWarning, stacklevel=2)
+    strat = personalize_strategy(pcfg, loss_fn, mode)
+    return lambda params, batch: strat.local_update(params, batch, None)[0]
 
 
 @dataclasses.dataclass
@@ -67,7 +66,7 @@ class Ticket:
     user: object
     mode: str
     stamp: int                 # ring window the request was submitted in
-    status: str = "queued"     # queued | done | dropped
+    status: str = "queued"     # queued | done | dropped | capped
     tau: int = 0               # staleness in windows, set at drain time
 
 
@@ -88,12 +87,17 @@ class MicroBatcher:
     """
 
     def __init__(self, engines: Dict[str, CohortEngine],
-                 n_shards: int = 1):
+                 n_shards: int = 1, user_cap: Optional[int] = None):
         self.engines = engines
         self.n_shards = max(int(n_shards), 1)
+        self.user_cap = user_cap
         self._queue: List[Tuple[Ticket, Dict]] = []
+        # per-user rows admitted to the window currently accumulating
+        self._cap_window: int = -1
+        self._user_rows: Dict[object, int] = {}
         self.stats = {"submitted": 0, "drains": 0, "cohort_calls": 0,
-                      "max_coalesced": 0, "shard_padding": 0, "dropped": 0}
+                      "max_coalesced": 0, "shard_padding": 0, "dropped": 0,
+                      "fairness_capped": 0}
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -144,11 +148,18 @@ class MicroBatcher:
 
         Requests whose staleness ``current − stamp`` exceeds ``tau_max``
         (or whose snapshot already retired from the ring) are marked
-        ``dropped`` without spending a cohort slot on them.
+        ``dropped`` without spending a cohort slot on them; with
+        ``user_cap`` set, a user's requests beyond the cap *within one
+        aggregation window* are likewise refused pre-cohort
+        (``status="capped"``) so heavy users cannot monopolize the
+        window's apply weight vector.
         """
         queue, self._queue = self._queue, []
         if not queue:
             return
+        if current != self._cap_window:        # window rolled: caps reset
+            self._cap_window = current
+            self._user_rows = {}
         self.stats["drains"] += 1
         self.stats["max_coalesced"] = max(self.stats["max_coalesced"],
                                           len(queue))
@@ -159,6 +170,13 @@ class MicroBatcher:
                 ticket.status = "dropped"
                 self.stats["dropped"] += 1
                 continue
+            if self.user_cap is not None:
+                used = self._user_rows.get(ticket.user, 0)
+                if used >= self.user_cap:
+                    ticket.status = "capped"
+                    self.stats["fairness_capped"] += 1
+                    continue
+                self._user_rows[ticket.user] = used + 1
             groups.setdefault((ticket.mode, ticket.stamp), []).append(
                 (ticket, batch))
         for (mode, stamp), reqs in sorted(groups.items(),

@@ -29,12 +29,13 @@ from typing import Callable, Dict, Iterable, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint.store import load_meta, load_pytree, save_pytree
 from repro.core import init_server_state, staleness_stats
-from repro.core.types import PersAFLConfig
+from repro.core.types import PersAFLConfig, ServerState
 from repro.fl.engine import CohortEngine, DeltaBank
 from repro.serving.bank import DeltaRing
 from repro.serving.batcher import (MODES, MicroBatcher, Ticket,
-                                   personalize_delta_fn)
+                                   personalize_strategy)
 
 
 def _own_copy(params):
@@ -57,13 +58,19 @@ class PersonalizationServer:
     tau_max     : bounded-staleness admission (≤ W−1; default W−1)
     max_pending : auto-flush threshold for the request queue
     head_cache  : max cached per-user head handles (LRU)
+    user_cap    : fairness bound — max delta rows one user may have
+                  admitted into a single aggregation window (None = off)
+
+    Each mode's cohort engine is driven by the registry strategy
+    ``repro.fl.api.strategy("personalize", mode=...)`` — the serving rules
+    are plain Strategy citizens, not a ``client_fn`` special case.
     """
 
     def __init__(self, init_params, loss_fn: Callable,
                  pcfg: PersAFLConfig, *, cohort_impl: str = "auto",
                  modes: Iterable[str] = MODES, windows: int = 4,
                  tau_max: Optional[int] = None, max_pending: int = 64,
-                 head_cache: int = 4096):
+                 head_cache: int = 4096, user_cap: Optional[int] = None):
         self.pcfg = pcfg
         self.loss_fn = loss_fn
         self.state = init_server_state(_own_copy(init_params))
@@ -75,7 +82,7 @@ class PersonalizationServer:
         for mode in modes:
             eng = CohortEngine(
                 pcfg, loss_fn, cohort_impl=cohort_impl,
-                client_fn=personalize_delta_fn(pcfg, loss_fn, mode))
+                strategy=personalize_strategy(pcfg, loss_fn, mode))
             if shared_stats is None:
                 shared_stats = eng.stats
             else:
@@ -86,12 +93,13 @@ class PersonalizationServer:
         self.engines = engines
         self._engine_stats = shared_stats
 
-        self.ring = DeltaRing(self.state["params"], windows=windows,
-                              tau_max=tau_max)
+        self.ring = DeltaRing(self.state.params, windows=windows,
+                              tau_max=tau_max, user_cap=user_cap)
         for eng in engines.values():
             eng.add_bank_hook(self.ring.retain)   # bank handoff
         n_shards = max(eng._ndev for eng in engines.values())
-        self.batcher = MicroBatcher(engines, n_shards=n_shards)
+        self.batcher = MicroBatcher(engines, n_shards=n_shards,
+                                    user_cap=user_cap)
 
         # user -> (head DeltaBank, row): device-resident, LRU-evicted
         self._heads: "collections.OrderedDict" = collections.OrderedDict()
@@ -105,7 +113,7 @@ class PersonalizationServer:
     @property
     def params(self):
         """The current global model w (post last window apply)."""
-        return self.state["params"]
+        return self.state.params
 
     @property
     def window(self) -> int:
@@ -161,6 +169,11 @@ class PersonalizationServer:
             raise RuntimeError(
                 f"request for {ticket.user!r} exceeded tau_max="
                 f"{self.ring.tau_max} (tau={ticket.tau}); re-submit")
+        if ticket.status == "capped":
+            raise RuntimeError(
+                f"request for {ticket.user!r} exceeded the per-window "
+                f"fairness cap (user_cap={self.batcher.user_cap}); "
+                f"re-submit next window")
         if ticket.user not in self._heads:
             raise RuntimeError(
                 f"head for {ticket.user!r} was evicted from the cache "
@@ -211,6 +224,62 @@ class PersonalizationServer:
             self.flush()
         self.state = self.ring.advance(self.state, beta=self.pcfg.beta,
                                        damping=self.pcfg.staleness_damping)
+
+    # -- restart warm-start ------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Checkpoint the serving state through ``repro.checkpoint.store``:
+        the typed ServerState, the ring's retained params snapshots +
+        window counter, and the head cache as ONE stacked head bank.
+
+        A restart restored from this no longer rebuilds the ring empty —
+        users keep their cached heads and straggler *requests* stamped
+        before the restart still find their snapshots.  In-flight delta
+        rows (unapplied bank admissions) are the one thing lost; affected
+        users re-personalize against the restored snapshots.
+        """
+        users = list(self._heads)
+        tree = {
+            "server_state": self.state.as_dict(),
+            "ring_snapshots": {f"w{w}": snap
+                               for w, snap in self.ring._snapshots.items()},
+            "head_stack": self.stacked_heads(users) if users else None,
+        }
+        meta = {"users": users, "ring_current": self.ring.current,
+                "windows": self.ring.windows, "tau_max": self.ring.tau_max,
+                "user_cap": self.ring.user_cap}
+        save_pytree(path, tree, meta=meta)
+
+    @classmethod
+    def restore(cls, path: str, loss_fn: Callable, pcfg: PersAFLConfig,
+                **kw) -> "PersonalizationServer":
+        """Rebuild a server from :meth:`save`'s checkpoint (warm start).
+
+        Ring depth / staleness bound / fairness cap come from the
+        checkpoint; ``**kw`` forwards the process-local knobs
+        (``cohort_impl``, ``modes``, ``max_pending``, ``head_cache``).
+        Head-cache users must be JSON-serializable keys (strings in
+        practice) — they round-trip through the sidecar meta file.
+        """
+        tree = load_pytree(path)
+        meta = load_meta(path)
+        state = ServerState.from_dict(
+            jax.tree.map(jnp.asarray, tree["server_state"]))
+        srv = cls(state.params, loss_fn, pcfg, windows=meta["windows"],
+                  tau_max=meta["tau_max"], user_cap=meta["user_cap"], **kw)
+        srv.state = state
+        snapshots = {int(k[1:]): jax.tree.map(jnp.asarray, snap)
+                     for k, snap in tree["ring_snapshots"].items()}
+        srv.ring.load(snapshots, meta["ring_current"])
+        users = meta["users"]
+        if users:
+            heads = DeltaBank(
+                stacked=jax.tree.map(jnp.asarray, tree["head_stack"]),
+                k=len(users), stats=srv._engine_stats)
+            srv.ring.retain(heads)  # device residency across windows
+            for row, user in enumerate(users):
+                srv._cache_head(user, heads, row)
+        return srv
 
     # -- observability -----------------------------------------------------
 

@@ -12,8 +12,9 @@ import pytest
 from repro.configs.paper_models import MNIST_CNN
 from repro.core import PersAFLConfig, client_update, split_batches_for_option
 from repro.data import make_federated_dataset
-from repro.fl import (AsyncSimulator, BufferedAsyncSimulator, CohortEngine,
-                      DelayModel, SyncSimulator)
+from repro.fl import (ApplyPolicy, AsyncSimulator, BufferedAsyncSimulator,
+                      CohortEngine, DelayModel, FLRun, SyncSimulator,
+                      buffered)
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
 
 
@@ -202,36 +203,43 @@ def test_buffered_flush_never_transfers_deltas_to_host(fed_small):
     assert sim.engine.stats["host_materializations"] == 0
 
 
-class _LegacyBufferedSim(BufferedAsyncSimulator):
-    """The pre-DeltaBank flush: M host-side damped tree.maps + one summed
-    apply.  Kept only as the numerical-equality oracle for the fused
-    apply_rows weight-vector path."""
+class _LegacyHostLoopPolicy(ApplyPolicy):
+    """The pre-DeltaBank flush as an ApplyPolicy: M host-side damped
+    tree.maps + one summed apply.  Kept only as the numerical-equality
+    oracle for the fused apply_rows weight-vector path — and as proof any
+    apply schedule plugs into FLRun's event loop."""
 
-    def _on_upload(self, now, rid, version, hist, eval_fn, eval_every):
+    def __init__(self, m):
+        self.m = m
+
+    def start(self, run):
+        self._buffer = []
+
+    def on_upload(self, run, now, rid, version, hist, eval_fn, eval_every):
         from repro.core import apply_buffered
-        staleness = self._t - version
+        staleness = run._t - version
         hist.staleness.append(staleness)
         self._buffer.append((rid, staleness))
-        if len(self._buffer) < self.buffer_size:
+        if len(self._buffer) < self.m:
             return
-        self._flush()
+        run._flush()
         deltas = []
         for r, _ in self._buffer:
-            bank, idx = self._computed.pop(r)
+            bank, idx = run._computed.pop(r)
             deltas.append(bank.row(idx))
         stales = [s for _, s in self._buffer]
-        damping = self.pcfg.staleness_damping
+        damping = run.pcfg.staleness_damping
         if damping:
             deltas = [jax.tree.map(lambda x: x * (1.0 + s) ** (-damping), d)
                       for d, s in zip(deltas, stales)]
         delta_sum = jax.tree.map(lambda *xs: sum(xs), *deltas)
-        t_old = self._t
-        self.state = apply_buffered(self.state, delta_sum, len(deltas),
-                                    self.pcfg.beta,
-                                    staleness_max=max(stales),
-                                    staleness_sum=float(sum(stales)))
+        t_old = run._t
+        run.state = apply_buffered(run.state, delta_sum, len(deltas),
+                                   run.pcfg.beta,
+                                   staleness_max=max(stales),
+                                   staleness_sum=float(sum(stales)))
         self._buffer = []
-        self._t = t_old + len(deltas)
+        run._t = t_old + len(deltas)
 
 
 @pytest.mark.parametrize("damping", [0.0, 1.5])
@@ -242,11 +250,12 @@ def test_buffered_apply_rows_matches_legacy_host_loop(fed_small, damping):
     pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02, buffer_size=4,
                          staleness_damping=damping)
     sims = []
-    for cls in (BufferedAsyncSimulator, _LegacyBufferedSim):
-        sim = cls(clients=clients, loss_fn=loss, init_params=params,
-                  pcfg=pcfg, delays=DelayModel(len(clients), seed=1),
-                  batch_size=8, seed=0)
-        sim.run(max_server_rounds=12)
+    for schedule in (buffered(4), _LegacyHostLoopPolicy(4)):
+        sim = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                    pcfg=pcfg, delays=DelayModel(len(clients), seed=1),
+                    strategy="persafl", schedule=schedule,
+                    batch_size=8, seed=0)
+        sim.run(max_rounds=12)
         sims.append(sim)
     new, old = sims
     assert int(new.final_stats["server_rounds"]) \

@@ -250,6 +250,94 @@ def test_head_cache_lru_eviction():
     jax.block_until_ready(jax.tree.leaves(srv.head("u4"))[0])
 
 
+def test_fairness_cap_bounds_per_user_rows_per_window():
+    """A heavy user cannot monopolize the window's apply weight vector:
+    rows beyond user_cap are refused pre-cohort and the drop is typed."""
+    srv = PersonalizationServer(_params(), loss, _pcfg(), user_cap=2)
+    tickets = [srv.submit("heavy", user_batch(i)) for i in range(4)]
+    t_light = srv.submit("light", user_batch(9))
+    srv.flush()
+    assert [t.status for t in tickets] == ["done", "done", "capped",
+                                           "capped"]
+    assert t_light.status == "done"
+    assert srv.stats["batcher_fairness_capped"] == 2
+    assert srv.stats["ring_admitted"] == 3        # 2 heavy + 1 light
+    with pytest.raises(RuntimeError, match="fairness cap"):
+        srv.poll(tickets[2])
+    # the cap resets at the window boundary: same user serves again
+    srv.advance_window()
+    t_next = srv.submit("heavy", user_batch(5))
+    srv.flush()
+    assert t_next.status == "done"
+
+
+def test_fairness_cap_ring_is_admission_authority():
+    """The ring enforces the cap cumulatively across drains within one
+    window (the batcher's pre-filter is per-drain bookkeeping)."""
+    from repro.serving import DeltaRing
+    ring = DeltaRing(_params(), windows=2, user_cap=1)
+    srv = PersonalizationServer(_params(), loss, _pcfg())
+    srv.submit("u", user_batch(0))
+    srv.flush()
+    bank = srv.ring._banks[0][0]
+    assert ring.admit("u", bank, 0, 0) is True
+    assert ring.admit("u", bank, 0, 0) is False   # over cap, same window
+    assert ring.stats["fairness_capped"] == 1
+    state = ring.advance(srv.state, beta=0.5)
+    assert ring.admit("u", bank, 0, 1) is True    # new window, cap reset
+    assert state is not None
+
+
+def test_restart_warm_start_roundtrip(tmp_path):
+    """save/restore through repro.checkpoint.store: a restarted server
+    keeps its global params, ring snapshots + window counter, and the
+    head cache — no empty-ring cold start."""
+    pcfg = _pcfg()
+    srv = PersonalizationServer(_params(), loss, pcfg, windows=3,
+                                user_cap=4)
+    users = [f"u{i}" for i in range(4)]
+    for w in range(2):
+        for i, u in enumerate(users):
+            srv.submit(u, user_batch(10 * w + i))
+        srv.advance_window()
+    heads_before = {u: jax.tree.map(np.asarray, srv.head(u))
+                    for u in users}
+    path = str(tmp_path / "serve_state")
+    srv.save(path)
+
+    srv2 = PersonalizationServer.restore(path, loss, pcfg)
+    # global model, window counter, staleness accounting all survive
+    _close(srv2.params, srv.params)
+    assert srv2.window == srv.window == 2
+    assert int(srv2.staleness()["server_rounds"]) \
+        == int(srv.staleness()["server_rounds"])
+    assert srv2.ring.user_cap == 4
+    # ring snapshots survive (straggler requests can still drain)
+    assert set(srv2.ring._snapshots) == set(srv.ring._snapshots)
+    for w in srv.ring._snapshots:
+        _close(srv2.ring.snapshot(w), srv.ring.snapshot(w))
+    # the head cache is warm: no re-personalization needed after restart
+    assert srv2.stats["cached_heads"] == len(users)
+    for u in users:
+        _close(srv2.head(u), heads_before[u])
+    # and the restored server keeps serving + advancing
+    t = srv2.submit("fresh", user_batch(99))
+    srv2.advance_window()
+    assert t.status == "done"
+    assert srv2.window == 3
+
+
+def test_restart_with_empty_head_cache(tmp_path):
+    srv = PersonalizationServer(_params(), loss, _pcfg())
+    srv.advance_window()
+    path = str(tmp_path / "empty_state")
+    srv.save(path)
+    srv2 = PersonalizationServer.restore(path, loss, _pcfg())
+    assert srv2.stats["cached_heads"] == 0
+    assert srv2.window == 1
+    _close(srv2.params, srv.params)
+
+
 def test_window_apply_advances_global_model():
     srv = PersonalizationServer(_params(), loss, _pcfg())
     before = jax.tree.map(np.asarray, srv.params)

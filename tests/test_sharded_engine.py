@@ -116,6 +116,33 @@ def test_shard_map_buffered_simulator_end_to_end():
         assert bool(jnp.all(jnp.isfinite(leaf)))
 
 
+def test_shard_map_stateful_strategy_matches_vmap():
+    """PR 4: stacked client state (SCAFFOLD control variates) threads
+    through the sharded cohort exactly like the vmap path — deltas AND
+    updated per-client states agree."""
+    from repro.fl import strategy
+    params = {"w": jnp.arange(1.0, 6.0) * 0.1}
+    batch_list = [_client_batches(seed) for seed in range(8)]
+    pcfg = _pcfg("A")
+    banks = {}
+    for impl in ("vmap", "shard_map"):
+        strat = strategy("scaffold").bind(pcfg, quad_loss)
+        eng = CohortEngine(pcfg, quad_loss, cohort_impl=impl,
+                           strategy=strat)
+        cstates = [strat.dispatch_state(strat.init_client_state(params))
+                   for _ in batch_list]
+        banks[impl] = eng.update_cohort(params, batch_list,
+                                        cstate_list=cstates)
+    for i in range(8):
+        np.testing.assert_allclose(
+            np.asarray(banks["shard_map"].client_state(i)["w"]),
+            np.asarray(banks["vmap"].client_state(i)["w"]),
+            rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(banks["shard_map"][i]["w"]),
+                                   np.asarray(banks["vmap"][i]["w"]),
+                                   rtol=1e-5, atol=1e-6)
+
+
 @pytest.mark.parametrize("k", [5, 13, 17])
 def test_padding_waste_matches_vmap_at_non_pow2_cohorts(k):
     """Bucket accounting parity: at non-pow2 cohort sizes the shard_map
