@@ -14,6 +14,10 @@
   serve               — batched personalization through
                         PersonalizationServer vs per-request loop at 32
                         concurrent users (req/s, zero host materializations)
+  serve_transport     — N concurrent socket connections driving submit/poll
+                        through TransportServer vs the in-process server
+                        path (req/s, p50/p99 latency, ≤1.5x gate, zero
+                        host materializations)
   kernels             — Pallas kernels (interpret) vs jnp oracle, µs/call
 
 Prints ``name,us_per_call,derived`` CSV lines (plus per-figure CSV blocks).
@@ -378,6 +382,124 @@ def serve():
     return speedup
 
 
+def serve_transport():
+    """Transport front-end throughput: N concurrent client connections in
+    a SECOND OS PROCESS (``benchmarks.transport_loadgen``) driving
+    submit/poll over the loopback socket vs the same windowed workload
+    through the in-process PersonalizationServer surface.
+
+    The contract under test: the transport must NOT forfeit the
+    micro-batching win — all N connections' submits coalesce into the same
+    pow2-bucketed cohort calls (the queue fills to ``max_pending`` and
+    flushes synchronously; the ``flush_ms`` deadline timer only catches
+    stragglers) and served heads are encoded from one stacked gather per
+    flush, so batched throughput over the socket stays within 1.5x of the
+    in-process path (gated) and steady-state ``host_materializations``
+    stays 0 (gated).  Reports req/s plus p50/p99 per-request latency
+    (submit → personalized head on the client).  The head is
+    personalization-sized (d=256 features, K=200 prox steps) — at toy
+    sizes the wire codec, not the serving stack, dominates both paths."""
+    import asyncio
+
+    from repro.core import PersAFLConfig
+    from repro.serving import PersonalizationServer
+    from repro.serving.transport import TransportServer
+
+    d, rows, conns = 256, 32, 32
+    rounds, reps = 4 if FAST else 8, 3
+    rng = np.random.RandomState(0)
+
+    def loss(p, b):
+        logits = b["images"] @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.sum(jax.nn.one_hot(b["labels"], 10) * logp, -1))
+
+    params = {"w": jnp.zeros((d, 10)), "b": jnp.zeros((10,))}
+    pcfg = PersAFLConfig(option="C", lam=20.0, inner_steps=200,
+                         inner_eta=0.01, beta=0.5)
+    # the loadgen process generates bit-identical batches (same seed)
+    batches = [{"images": rng.randn(rows, d).astype(np.float32),
+                "labels": rng.randint(0, 10, rows).astype(np.int32)}
+               for _ in range(conns)]
+    uids = [f"user{u}" for u in range(conns)]
+
+    def make_server():
+        return PersonalizationServer(params, loss, pcfg, modes=("C",),
+                                     max_pending=conns)
+
+    # in-process baseline: the `serve` row's server path at the same
+    # (users, rounds) — submit all, flush, fetch every head, advance
+    srv = make_server()
+
+    def window():
+        tickets = [srv.submit(u, b) for u, b in zip(uids, batches)]
+        srv.flush()
+        for t in tickets:
+            jax.block_until_ready(jax.tree.leaves(srv.poll(t))[0])
+        srv.advance_window()
+
+    window()                                                 # warm-up
+    t_inproc = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        for _ in range(rounds):
+            window()
+        t_inproc = min(t_inproc, time.time() - t0)
+
+    # transport: boot the front-end here, drive it from the loadgen
+    # process — one connection per user, all submits racing the same
+    # queue; the Nth submit triggers the synchronous micro-batch flush
+    async def drive():
+        psrv = make_server()
+        ts = await TransportServer(psrv, flush_ms=100.0,
+                                   max_inflight=4 * conns).start()
+        proc = await asyncio.create_subprocess_exec(
+            sys.executable, "-m", "benchmarks.transport_loadgen",
+            "--port", str(ts.port), "--conns", str(conns),
+            "--rounds", str(rounds), "--reps", str(reps),
+            "--d", str(d), "--rows", str(rows),
+            stdout=asyncio.subprocess.PIPE)
+        out, _ = await proc.communicate()
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"transport loadgen exited {proc.returncode}")
+        res = json.loads(out.decode().splitlines()[-1])
+        stats = dict(psrv.stats)
+        await ts.stop()
+        return res["wall_s"], res["latencies_s"], stats
+
+    t_transport, lat, stats = asyncio.run(drive())
+    n_req = conns * rounds
+    p50 = float(np.percentile(lat, 50) * 1e3)
+    p99 = float(np.percentile(lat, 99) * 1e3)
+    host_mat = int(stats["host_materializations"])
+    ratio = t_transport / t_inproc
+    print(f"serve_transport,in_process,wall_s={t_inproc:.3f},"
+          f"req_per_s={n_req / t_inproc:.0f}", flush=True)
+    print(f"serve_transport,transport,wall_s={t_transport:.3f},"
+          f"req_per_s={n_req / t_transport:.0f},conns={conns},"
+          f"p50_ms={p50:.2f},p99_ms={p99:.2f},"
+          f"cohort_calls={stats['cohort_calls']},"
+          f"host_materializations={host_mat}", flush=True)
+    print(f"serve_transport,{t_transport / n_req * 1e6:.0f},"
+          f"ratio_vs_in_process={ratio:.2f}")
+    _save("serve_transport", {
+        "conns": conns, "rounds": rounds,
+        "wall_in_process_s": t_inproc, "wall_transport_s": t_transport,
+        "req_per_s_in_process": n_req / t_inproc,
+        "req_per_s_transport": n_req / t_transport,
+        "p50_ms": p50, "p99_ms": p99,
+        "ratio_vs_in_process": ratio,
+        "host_materializations": host_mat})
+    if host_mat != 0:       # steady-state contract, not a report
+        raise RuntimeError(f"transport path materialized {host_mat} banks")
+    if ratio > 1.5:         # the micro-batching win must survive the wire
+        raise RuntimeError(
+            f"transport throughput {ratio:.2f}x slower than in-process "
+            f"(bound: 1.5x) — the socket front-end forfeited batching")
+    return ratio
+
+
 def kernels():
     """µs/call for each Pallas kernel (interpret) and its jnp oracle."""
     from repro.kernels.flash_attention.kernel import flash_attention_fwd
@@ -426,6 +548,7 @@ BENCHES = {
     "engine": engine,
     "engine_sharded": engine_sharded,
     "serve": serve,
+    "serve_transport": serve_transport,
     "kernels": kernels,
 }
 

@@ -1,0 +1,81 @@
+"""Load generator for the ``serve_transport`` benchmark row.
+
+Runs as its OWN OS process (the point of the transport: a second process
+driving personalization over the socket): N concurrent
+:class:`repro.serving.transport.AsyncTransportClient` connections each
+submit one request per aggregation window and poll the personalized head
+back; a coordinator ADVANCE closes each window.  Client-side npz
+encode/decode therefore burns this process's core, not the server's event
+loop — exactly the deployment shape.
+
+Emits one JSON line to stdout: best-of-``--reps`` wall seconds over
+``--rounds`` windows plus per-request submit→head latencies (seconds).
+
+  PYTHONPATH=src python -m benchmarks.transport_loadgen --port P --conns 32
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import time
+
+import numpy as np
+
+from repro.serving.transport import AsyncTransportClient
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--conns", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--d", type=int, default=256)
+    ap.add_argument("--rows", type=int, default=32)
+    args = ap.parse_args()
+
+    rng = np.random.RandomState(0)
+    batches = [{"images": rng.randn(args.rows, args.d).astype(np.float32),
+                "labels": rng.randint(0, 10, args.rows).astype(np.int32)}
+               for _ in range(args.conns)]
+
+    async def drive():
+        clients = []
+        for _ in range(args.conns):
+            clients.append(await AsyncTransportClient(
+                args.host, args.port).connect())
+
+        async def one(u: int, lat) -> None:
+            t0 = time.perf_counter()
+            tid = await clients[u].submit(f"user{u}", batches[u])
+            head = await clients[u].poll(tid, wait_ms=120_000)
+            assert head is not None, "poll timed out"
+            lat.append(time.perf_counter() - t0)
+
+        async def window(lat) -> None:
+            await asyncio.gather(*(one(u, lat)
+                                   for u in range(args.conns)))
+            await clients[0].advance()
+
+        await window([])                       # warm-up (server compiles)
+        best, lat = float("inf"), []
+        for _ in range(args.reps):
+            lat_rep = []
+            t0 = time.time()
+            for _ in range(args.rounds):
+                await window(lat_rep)
+            wall = time.time() - t0
+            if wall < best:
+                best, lat = wall, lat_rep
+        for c in clients:
+            await c.close()
+        return {"wall_s": best, "latencies_s": lat,
+                "conns": args.conns, "rounds": args.rounds}
+
+    print(json.dumps(asyncio.run(drive())), flush=True)
+
+
+if __name__ == "__main__":
+    main()

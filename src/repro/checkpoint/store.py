@@ -56,6 +56,13 @@ def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
     return rebuild(root)
 
 
+# public aliases: the flat ``path/to/leaf`` layout doubles as the wire
+# encoding of :mod:`repro.serving.transport` (npz frames over the socket
+# use exactly the checkpoint layout, so a captured frame IS a checkpoint)
+flatten_pytree = _flatten
+unflatten_pytree = _unflatten
+
+
 def save_pytree(path: str, tree, meta: Dict | None = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(jax.tree.map(np.asarray, tree))

@@ -67,9 +67,11 @@ class History:
     active_times: List[float] = dataclasses.field(default_factory=list)
     active_ratio: List[float] = dataclasses.field(default_factory=list)
     staleness: List[int] = dataclasses.field(default_factory=list)
-    # simulated time at which the run actually stopped (the event loop's
-    # final `now`) — NOT the 5s-grid-quantized last active_times entry;
-    # equal-simulated-time comparisons must budget on this
+    # simulated time at which the run actually stopped — NOT the
+    # 5s-grid-quantized last active_times entry; equal-simulated-time
+    # comparisons must budget on this.  When a max_time budget binds the
+    # event loop, end_time is clamped to exactly max_time (the first event
+    # past the budget never runs and never advances the clock)
     end_time: float = 0.0
 
     def as_dict(self) -> Dict:
@@ -619,6 +621,12 @@ class FLRun:
         while self._t < max_rounds and heap:
             now, _, kind, i, payload = heapq.heappop(heap)
             if max_time is not None and now > max_time:
+                # the popped event lies PAST the budget: it must not run,
+                # and the clock stops AT the budget — end_time must never
+                # overshoot max_time or equal-simulated-time comparisons
+                # (experiments/sweeps/buffered_vs_immediate.py) would hand
+                # the overshooting run extra simulated seconds
+                now = max_time
                 break
             # record active ratio on a time grid: active = comp./uploading
             while next_active_t <= now:
@@ -646,6 +654,15 @@ class FLRun:
                 t_down = now + self.delays.sample_download(i)
                 heapq.heappush(heap, (t_down, seq, "down_done", i, None))
                 seq += 1
+        # close out the active-ratio grid to the actual stop time: on a
+        # max_time break the in-loop recording stopped at the last
+        # *executed* event, leaving the grid short of the boundary
+        while next_active_t <= now:
+            up_now = sum(1 for v in busy_up.values()
+                         if v is not None and v > next_active_t)
+            hist.active_times.append(next_active_t)
+            hist.active_ratio.append(up_now / n)
+            next_active_t += record_active_every
         hist.end_time = now
         return hist
 

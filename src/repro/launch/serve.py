@@ -11,10 +11,28 @@ step-by-step because each token depends on the previous argmax.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
       --personalize --requests 4 --tokens 16
+
+``--listen PORT`` swaps the one-shot decode for a network front-end: the
+PersonalizationServer is wrapped in a
+:class:`repro.serving.transport.TransportServer` and a second OS process
+(or a fleet of them) drives personalization over the socket with
+:class:`repro.serving.transport.TransportClient` — submit a token batch
+shaped like the model loss expects (``{"tokens": int32[1, L], "labels":
+int32[1, L]}``, L a multiple of the arch's SSM chunk, plus ``visual`` /
+``frames`` leaves for the archs that take them — see ``_user_batch``),
+poll the personalized head back, decode locally or fetch it again later
+via HEAD.  A malformed batch fails its flush group with a typed
+``server_error`` reply; the server keeps serving.  ``--flush-ms`` bounds queueing latency,
+``--window-ms`` drives the aggregation-window boundary on a wall clock,
+``--max-inflight`` is the backpressure bound (queue full → BUSY frames).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
+      --listen 7777 --mode C
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import os
 import time
@@ -117,6 +135,38 @@ def _decode_personalized(cfg, heads, prompt, max_len, prompt_len):
     return jnp.concatenate(generated, axis=1) if generated else None
 
 
+def _serve_transport(args, server) -> None:
+    """Run the socket front-end until --serve-seconds elapse or ^C."""
+    from repro.serving.transport import PROTOCOL_VERSION, TransportServer
+    ts = TransportServer(server, port=args.listen, flush_ms=args.flush_ms,
+                         window_ms=args.window_ms,
+                         max_inflight=args.max_inflight)
+
+    async def run():
+        await ts.start()
+        print(f"serving personalization on 127.0.0.1:{ts.port} "
+              f"(wire protocol v{PROTOCOL_VERSION}, mode {args.mode}, "
+              f"flush_ms={args.flush_ms}, window_ms={args.window_ms}, "
+              f"max_inflight={args.max_inflight})", flush=True)
+        try:
+            if args.serve_seconds is not None:
+                await asyncio.sleep(args.serve_seconds)
+            else:
+                await asyncio.Event().wait()
+        finally:
+            await ts.stop()
+            print(f"transport stopped after "
+                  f"{ts.stats['connections']} connections / "
+                  f"{ts.stats['frames']} frames "
+                  f"(host_materializations="
+                  f"{server.stats['host_materializations']})", flush=True)
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        pass
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -139,7 +189,27 @@ def main():
     ap.add_argument("--inner-steps", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments/serve")
+    ap.add_argument("--listen", type=int, default=None, metavar="PORT",
+                    help="serve personalization over a socket transport "
+                         "on this port (0 = ephemeral) instead of the "
+                         "one-shot decode; implies --personalize")
+    ap.add_argument("--flush-ms", type=float, default=10.0,
+                    help="transport deadline flush: a partial request "
+                         "queue older than this is flushed by timer")
+    ap.add_argument("--window-ms", type=float, default=None,
+                    help="advance the aggregation window on this "
+                         "wall-clock period (default: only on ADVANCE "
+                         "frames)")
+    ap.add_argument("--max-inflight", type=int, default=256,
+                    help="transport backpressure: max open tickets "
+                         "before SUBMIT gets a BUSY frame")
+    ap.add_argument("--serve-seconds", type=float, default=None,
+                    help="with --listen: stop after this many seconds "
+                         "(default: serve until interrupted)")
     args = ap.parse_args()
+
+    if args.listen is not None:
+        args.personalize = True
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -164,6 +234,9 @@ def main():
         server = PersonalizationServer(params, loss, pcfg,
                                        modes=(args.mode,),
                                        max_pending=max(B, 1))
+        if args.listen is not None:
+            _serve_transport(args, server)
+            return
         tickets = [server.submit(f"user{u}",
                                  _user_batch(cfg, args.seed + u, plen),
                                  mode=args.mode)

@@ -28,9 +28,20 @@ Parts:
     submit/poll semantics, device-resident per-user head cache, window
     advance folding served deltas back into the global model, steady-state
     zero ``host_materializations``.
+  * :mod:`repro.serving.transport` — :class:`TransportServer` /
+    :class:`TransportClient`: the asyncio socket front-end that makes the
+    server network-addressable (length-prefixed JSON + npz frames:
+    SUBMIT/POLL/HEAD/STATS), with deadline-driven flushing (``flush_ms`` /
+    ``window_ms`` timers), explicit backpressure (bounded in-flight
+    tickets → ``BUSY``), and concurrent connections coalescing into the
+    same micro-batched cohort calls.  ``launch/serve.py --listen PORT``
+    boots it around a model-serving PersonalizationServer.
 """
 from repro.serving.bank import DeltaRing                        # noqa: F401
 from repro.serving.batcher import (MODES, MicroBatcher, Ticket,  # noqa: F401
                                    personalize_delta_fn,
                                    personalize_strategy)
 from repro.serving.server import PersonalizationServer           # noqa: F401
+from repro.serving.transport import (AsyncTransportClient,       # noqa: F401
+                                     TransportBusy, TransportClient,
+                                     TransportError, TransportServer)

@@ -22,10 +22,11 @@ traffic arrives forever and the global model advances in aggregation
 Persistence scope: the ring persists *across windows* (device residency, no
 host round-trip) AND — via :meth:`load` +
 ``PersonalizationServer.save/restore`` through ``repro.checkpoint.store`` —
-its params snapshots and window counter survive process restarts.  What a
-restart still loses: in-flight straggler delta rows (their banks are
-device-only); affected users simply re-personalize against the restored
-snapshots.
+its params snapshots, window counter and cumulative admission stats survive
+process restarts (see :meth:`DeltaRing.load` for exactly which counters
+persist and which are process-local).  What a restart still loses:
+in-flight straggler delta rows (their banks are device-only); affected
+users simply re-personalize against the restored snapshots.
 
 Fairness: ``user_cap`` bounds the delta rows one user may have admitted
 into a single window's apply (the ring is the admission authority; the
@@ -89,35 +90,49 @@ class DeltaRing:
         None once the row's window has retired from the ring."""
         return self._by_user.get(user)
 
+    def admitted_rows(self, user) -> int:
+        """Rows this user already has admitted into the accumulating
+        window — the consumed share of the ``user_cap`` fairness budget
+        (front-ends consult this to refuse over-cap work at the door)."""
+        return self._user_rows.get(user, 0)
+
     @property
     def live_banks(self) -> int:
         return sum(len(b) for b in self._banks.values())
 
     # -- admission ---------------------------------------------------------
 
-    def admit(self, user, bank: DeltaBank, row: int, tau: int) -> bool:
+    def admit_row(self, user, bank: DeltaBank, row: int, tau: int) -> str:
         """Admit one delta row into the accumulating window's apply.
 
         ``tau`` is the row's staleness in windows (0 = computed against the
         current snapshot).  Straggler rows (τ > 0) are re-weighted into
         THIS window — the "next" window relative to the one they were
-        stamped in — and rows past ``tau_max`` are refused, as is a user's
-        row past the per-window fairness cap (``user_cap``).
+        stamped in.  The ring is the admission authority, so a refusal
+        *reports its cause*: ``"dropped"`` for rows past ``tau_max``,
+        ``"capped"`` for a user's row past the per-window fairness cap
+        (``user_cap``), ``"admitted"`` otherwise — callers surface the
+        cause to the user (a fairness refusal is re-submittable next
+        window; a staleness drop needs a fresh snapshot).
         """
         if tau > self.tau_max:
             self.stats["dropped"] += 1
-            return False
+            return "dropped"
         if self.user_cap is not None \
                 and self._user_rows.get(user, 0) >= self.user_cap:
             self.stats["fairness_capped"] += 1
-            return False
+            return "capped"
         if tau > 0:
             self.stats["stragglers"] += 1
         self.stats["admitted"] += 1
         self._user_rows[user] = self._user_rows.get(user, 0) + 1
         self._pending.append((bank, row, tau))
         self._by_user[user] = (self.current, bank, row)
-        return True
+        return "admitted"
+
+    def admit(self, user, bank: DeltaBank, row: int, tau: int) -> bool:
+        """Boolean convenience wrapper over :meth:`admit_row`."""
+        return self.admit_row(user, bank, row, tau) == "admitted"
 
     # -- window boundary ---------------------------------------------------
 
@@ -163,14 +178,26 @@ class DeltaRing:
 
     # -- restart warm-start ------------------------------------------------
 
-    def load(self, snapshots: Dict[int, object], current: int) -> None:
+    def load(self, snapshots: Dict[int, object], current: int,
+             stats: Optional[Dict[str, int]] = None) -> None:
         """Warm-start after a process restart: install the checkpointed
-        params snapshots and window counter (see
+        params snapshots, window counter AND cumulative ``stats`` (see
         ``PersonalizationServer.save``/``restore``).  Banks, pending
         admissions and per-user delta rows start empty — in-flight
         straggler rows do not survive a restart — but straggler *requests*
         stamped before the crash can still drain against their restored
-        snapshots."""
+        snapshots.
+
+        Persistence scope of the counters: every key of ``self.stats``
+        (``windows``/``admitted``/``stragglers``/``dropped``/
+        ``fairness_capped``) is lifetime-cumulative and survives restarts
+        through the checkpoint — per-window serve metrics derived from
+        them (e.g. admitted-per-window) stay consistent with the restored
+        window counter instead of restarting at zero.  Engine and batcher
+        stats (``host_materializations``, ``cohort_calls``, …) are
+        *process-local* by design and always restart at zero.  Pre-stats
+        checkpoints fall back to ``windows = current`` (the one counter
+        the window id implies) with the rest unknown-as-zero."""
         if current not in snapshots:
             raise ValueError(f"current window {current} has no snapshot")
         horizon = current - self.windows + 1
@@ -181,3 +208,8 @@ class DeltaRing:
         self._pending = []
         self._user_rows = {}
         self._by_user = {}
+        if stats is not None:
+            self.stats.update({k: int(v) for k, v in stats.items()
+                               if k in self.stats})
+        else:
+            self.stats["windows"] = current

@@ -20,6 +20,11 @@ Steady-state guarantee: submit → flush → poll/head → advance never moves a
 tensor to the host — heads are device-side gathers from stacked head banks
 and ``stats["host_materializations"]`` stays 0 (pinned by tests and the
 ``serve`` benchmark row).
+
+This surface is in-process; other processes reach it over the socket
+front-end (:class:`repro.serving.transport.TransportServer` bridges
+concurrent connections into submit/flush/poll with deadline-driven flush
+timers and explicit backpressure — see that module for the wire protocol).
 """
 from __future__ import annotations
 
@@ -147,9 +152,14 @@ class PersonalizationServer:
             for ticket, row in placed:
                 # the ring is the admission authority: the batcher's drain
                 # bound normally pre-filters, but a refusal here must not
-                # serve a head whose delta never reached the global apply
-                if not self.ring.admit(ticket.user, bank, row, ticket.tau):
-                    ticket.status = "dropped"
+                # serve a head whose delta never reached the global apply.
+                # The refusal CAUSE must survive to poll: a fairness-cap
+                # refusal is "capped" (re-submit next window), never
+                # "dropped" (which poll reports as a tau_max violation)
+                verdict = self.ring.admit_row(ticket.user, bank, row,
+                                              ticket.tau)
+                if verdict != "admitted":
+                    ticket.status = verdict
                     continue
                 self._cache_head(ticket.user, heads, row)
                 ticket.status = "done"
@@ -230,7 +240,8 @@ class PersonalizationServer:
     def save(self, path: str) -> None:
         """Checkpoint the serving state through ``repro.checkpoint.store``:
         the typed ServerState, the ring's retained params snapshots +
-        window counter, and the head cache as ONE stacked head bank.
+        window counter + cumulative admission stats, and the head cache as
+        ONE stacked head bank.
 
         A restart restored from this no longer rebuilds the ring empty —
         users keep their cached heads and straggler *requests* stamped
@@ -247,7 +258,9 @@ class PersonalizationServer:
         }
         meta = {"users": users, "ring_current": self.ring.current,
                 "windows": self.ring.windows, "tau_max": self.ring.tau_max,
-                "user_cap": self.ring.user_cap}
+                "user_cap": self.ring.user_cap,
+                "ring_stats": {k: int(v)
+                               for k, v in self.ring.stats.items()}}
         save_pytree(path, tree, meta=meta)
 
     @classmethod
@@ -270,7 +283,8 @@ class PersonalizationServer:
         srv.state = state
         snapshots = {int(k[1:]): jax.tree.map(jnp.asarray, snap)
                      for k, snap in tree["ring_snapshots"].items()}
-        srv.ring.load(snapshots, meta["ring_current"])
+        srv.ring.load(snapshots, meta["ring_current"],
+                      stats=meta.get("ring_stats"))
         users = meta["users"]
         if users:
             heads = DeltaBank(

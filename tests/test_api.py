@@ -292,6 +292,26 @@ def test_max_time_bounds_simulated_time():
     assert all(t <= budget for t in h_cut.active_times)
 
 
+def test_max_time_clamps_end_time_and_closes_grid():
+    """Regression: the event loop used to break only after popping an
+    event PAST the budget, so hist.end_time overshot max_time (handing
+    equal-simulated-time comparisons extra seconds) and the active-ratio
+    grid stopped short of the boundary."""
+    run = FLRun(clients=_clients(), loss_fn=_loss, init_params=_params(),
+                pcfg=_pcfg(), delays=DelayModel(6, seed=1),
+                strategy="persafl", schedule=immediate(), batch_size=8,
+                seed=0)
+    budget = 23.0
+    h = run.run(max_rounds=10_000, max_time=budget,
+                record_active_every=1.0)
+    # a dense stream guarantees events beyond the budget: the budget binds
+    assert h.end_time == budget
+    assert h.active_times and max(h.active_times) <= budget
+    # the grid is closed out to the boundary, not left at the last event
+    assert budget - max(h.active_times) < 1.0
+    assert len(h.active_times) == len(h.active_ratio)
+
+
 def test_run_requires_max_rounds():
     run = FLRun(clients=_clients(2), loss_fn=_loss, init_params=_params(),
                 pcfg=_pcfg(), delays=DelayModel(2, seed=1))

@@ -271,6 +271,43 @@ def test_fairness_cap_bounds_per_user_rows_per_window():
     assert t_next.status == "done"
 
 
+def test_ring_refusal_surfaces_capped_not_dropped():
+    """Regression: a ring-level fairness refusal used to mark the ticket
+    "dropped", so poll reported a bogus tau_max violation.  The ring (the
+    admission authority) must report WHY it refused, and flush must type
+    the ticket accordingly."""
+    srv = PersonalizationServer(_params(), loss, _pcfg(), user_cap=1)
+    # simulate pre-filter drift (multiple front-ends, restarted batcher):
+    # the batcher lets everything through, the ring stays the authority
+    srv.batcher.user_cap = None
+    t1 = srv.submit("u", user_batch(0))
+    t2 = srv.submit("u", user_batch(1))
+    srv.flush()
+    assert t1.status == "done"
+    assert t2.status == "capped"        # pre-PR: "dropped"
+    assert srv.stats["ring_fairness_capped"] == 1
+    assert srv.stats["ring_dropped"] == 0
+    with pytest.raises(RuntimeError, match="fairness cap"):
+        srv.poll(t2)                    # pre-PR: raised "tau_max"
+
+
+def test_ring_admit_row_reports_cause():
+    from repro.serving import DeltaRing
+    srv = PersonalizationServer(_params(), loss, _pcfg())
+    srv.submit("u", user_batch(0))
+    srv.flush()
+    bank = srv.ring._banks[0][0]
+    ring = DeltaRing(_params(), windows=3, user_cap=1)
+    assert ring.admit_row("a", bank, 0, 0) == "admitted"
+    assert ring.admit_row("a", bank, 0, 0) == "capped"
+    assert ring.admit_row("b", bank, 0, 3) == "dropped"  # tau_max = 2
+    # the boolean wrapper keeps its contract
+    assert ring.admit("c", bank, 0, 1) is True
+    assert ring.admit("c", bank, 0, 1) is False
+    assert ring.stats == {"windows": 0, "admitted": 2, "stragglers": 1,
+                          "dropped": 1, "fairness_capped": 2}
+
+
 def test_fairness_cap_ring_is_admission_authority():
     """The ring enforces the cap cumulatively across drains within one
     window (the batcher's pre-filter is per-drain bookkeeping)."""
@@ -325,6 +362,37 @@ def test_restart_warm_start_roundtrip(tmp_path):
     srv2.advance_window()
     assert t.status == "done"
     assert srv2.window == 3
+
+
+def test_restart_preserves_ring_stats(tmp_path):
+    """Regression: DeltaRing.load restored the window counter but left
+    stats["windows"] (and every other ring counter) at zero, skewing any
+    per-window serve metric computed after a restart."""
+    srv = PersonalizationServer(_params(), loss, _pcfg(), windows=3)
+    for w in range(2):
+        srv.submit(f"u{w}", user_batch(w))
+        srv.advance_window()
+    before = dict(srv.ring.stats)
+    assert before["windows"] == 2 and before["admitted"] == 2
+    path = str(tmp_path / "ring_stats")
+    srv.save(path)
+    srv2 = PersonalizationServer.restore(path, loss, _pcfg())
+    assert srv2.ring.stats == before          # pre-PR: all zeros
+    # counters keep accumulating from the restored values
+    srv2.submit("fresh", user_batch(9))
+    srv2.advance_window()
+    assert srv2.ring.stats["windows"] == 3
+    assert srv2.ring.stats["admitted"] == 3
+
+
+def test_ring_load_without_stats_falls_back_to_counter():
+    """Pre-stats checkpoints: windows falls back to the window counter
+    (the one value the counter implies), the rest stay zero."""
+    from repro.serving import DeltaRing
+    ring = DeltaRing(_params(), windows=3)
+    ring.load({4: _params(), 5: _params()}, 5)
+    assert ring.stats["windows"] == 5
+    assert ring.stats["admitted"] == 0
 
 
 def test_restart_with_empty_head_cache(tmp_path):
