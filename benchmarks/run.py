@@ -18,6 +18,10 @@
                         through TransportServer vs the in-process server
                         path (req/s, p50/p99 latency, ≤1.5x gate, zero
                         host materializations)
+  partial             — head-only (personal_subset) serving vs full-model:
+                        ring_bytes_per_user ≥ 20x smaller (gated), backbone
+                        bit-parity across windows, users/GiB residency row,
+                        and a fig2-config convergence pin (|Δacc| ≤ 0.1)
   kernels             — Pallas kernels (interpret) vs jnp oracle, µs/call
 
 Prints ``name,us_per_call,derived`` CSV lines (plus per-figure CSV blocks).
@@ -369,6 +373,7 @@ def serve():
           f"req_per_s={n_req / t_server:.0f},"
           f"windows={stats['ring_windows'] - warm_windows},"
           f"cohort_calls={stats['cohort_calls']},"
+          f"ring_bytes_per_user={stats['ring_bytes_per_user']},"
           f"host_materializations={host_mat}", flush=True)
     print(f"serve,{t_server / n_req * 1e6:.0f},speedup={speedup:.2f}")
     _save("serve", {"users": users, "rounds": rounds,
@@ -376,6 +381,7 @@ def serve():
                     "wall_server_s": t_server, "speedup": speedup,
                     "req_per_s_server": n_req / t_server,
                     "req_per_s_per_request": n_req / t_loop,
+                    "ring_bytes_per_user": int(stats["ring_bytes_per_user"]),
                     "host_materializations": int(host_mat)})
     if host_mat != 0:    # steady-state contract, not a report
         raise RuntimeError(f"serving path materialized {host_mat} banks")
@@ -500,6 +506,112 @@ def serve_transport():
     return ratio
 
 
+def partial():
+    """Partial-model personalization: head-only rows end-to-end.
+
+    Two gates plus a convergence pin:
+
+      * residency — a ``personal_subset=("b",)`` server on the serve-row
+        config banks 40-byte rows where the full server banks 1320-byte
+        ones; ``ring_bytes_per_user`` must shrink ≥ 20x (gated).  That
+        ratio is the resident-users-at-fixed-memory lever, reported as a
+        users-per-GiB row for both servers.
+      * backbone bit-parity — across several advanced windows the subset
+        server's backbone leaf stays bit-identical to the initial params
+        (``np.array_equal``, not allclose): head-only deltas never touch
+        it, so ONE shared backbone serves every retained window exactly.
+      * convergence pin — on the fig2 MNIST config, personalized accuracy
+        with head-only fine-tune (``fc/#1``, the final FC layer) must land
+        within 0.1 of full-model personalized fine-tune after a short
+        persafl-me run (gated): the head carries the personalization.
+    """
+    from repro.core import PersAFLConfig
+    from repro.serving import PersonalizationServer
+
+    d, users, windows = 32, 32, 3
+    rng = np.random.RandomState(0)
+
+    def loss(p, b):
+        logits = b["images"] @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.sum(jax.nn.one_hot(b["labels"], 10) * logp, -1))
+
+    params = {"w": jnp.zeros((d, 10)), "b": jnp.zeros((10,))}
+    pcfg = PersAFLConfig(option="C", lam=20.0, inner_steps=5,
+                         inner_eta=0.05, beta=0.5)
+    batches = [{"images": rng.randn(16, d).astype(np.float32),
+                "labels": rng.randint(0, 10, 16).astype(np.int32)}
+               for _ in range(users)]
+    uids = [f"user{u}" for u in range(users)]
+    w0 = np.asarray(params["w"])
+
+    bytes_per_user = {}
+    for name, subset in (("full", None), ("head_only", ("b",))):
+        srv = PersonalizationServer(params, loss, pcfg, modes=("C",),
+                                    max_pending=2 * users,
+                                    personal_subset=subset)
+        for _ in range(windows):
+            for uid, b in zip(uids, batches):
+                srv.submit(uid, b, mode="C")
+            srv.flush()
+            jax.block_until_ready(srv.stacked_heads(uids))
+            srv.advance_window()
+            if subset is not None and not np.array_equal(
+                    np.asarray(srv.params["w"]), w0):
+                raise RuntimeError(
+                    "head-only serving perturbed the backbone — subset "
+                    "rows must leave non-subset leaves bit-identical")
+        st = srv.stats
+        bytes_per_user[name] = int(st["ring_bytes_per_user"])
+        print(f"partial,{name},ring_row_bytes={st['ring_row_bytes']},"
+              f"ring_bytes_per_user={bytes_per_user[name]},"
+              f"users_per_gib={2 ** 30 // bytes_per_user[name]},"
+              f"host_materializations={st['host_materializations']}",
+              flush=True)
+    ratio = bytes_per_user["full"] / bytes_per_user["head_only"]
+
+    # convergence pin: fig2 MNIST config, short persafl-me run, then the
+    # same personalized eval with full vs head-only fine-tune masks
+    from repro.fl import (DelayModel, FLRun, immediate,
+                          make_personalized_eval, strategy)
+    clients, cparams, closs, cacc, _ = setup("mnist",
+                                             n_clients=10 if FAST else 20)
+    pcfg2 = PersAFLConfig(option="C", q_local=5, lam=25.0, inner_steps=5,
+                          inner_eta=0.02, beta=1.0, eta=0.002)
+    sim = FLRun(clients=clients, loss_fn=closs, init_params=cparams,
+                pcfg=pcfg2, delays=DelayModel(len(clients), seed=1),
+                strategy=strategy("persafl", option="C"),
+                schedule=immediate(), batch_size=16, seed=0)
+    sim.run(max_rounds=20 if FAST else 60)
+    trained = sim.state.params
+    ev_full = make_personalized_eval(closs, cacc, clients,
+                                     ft_steps=1, ft_lr=0.01)
+    ev_head = make_personalized_eval(closs, cacc, clients,
+                                     ft_steps=1, ft_lr=0.01,
+                                     personal_subset="fc/#1")
+    a_full, a_head = float(ev_full(trained)), float(ev_head(trained))
+    gap = abs(a_full - a_head)
+    print(f"partial,convergence,acc_full={a_full:.3f},"
+          f"acc_head_only={a_head:.3f},gap={gap:.3f}", flush=True)
+    print(f"partial,0,bytes_ratio={ratio:.1f}")
+    _save("partial", {
+        "ring_bytes_per_user_full": bytes_per_user["full"],
+        "ring_bytes_per_user_head_only": bytes_per_user["head_only"],
+        "users_per_gib_full": 2 ** 30 // bytes_per_user["full"],
+        "users_per_gib_head_only": 2 ** 30 // bytes_per_user["head_only"],
+        "bytes_ratio": ratio, "backbone_bit_parity": True,
+        "acc_full": a_full, "acc_head_only": a_head, "acc_gap": gap})
+    if ratio < 20.0:    # the residency win is the point — gate it
+        raise RuntimeError(
+            f"head-only rows only {ratio:.1f}x smaller than full rows "
+            f"(bound: 20x) — subset rows are not subset-shaped")
+    if gap > 0.1:       # head must carry the personalization
+        raise RuntimeError(
+            f"head-only personalization diverged from full by {gap:.3f} "
+            f"accuracy (bound: 0.1) on the fig2 MNIST config")
+    return ratio
+
+
 def kernels():
     """µs/call for each Pallas kernel (interpret) and its jnp oracle."""
     from repro.kernels.flash_attention.kernel import flash_attention_fwd
@@ -549,6 +661,7 @@ BENCHES = {
     "engine_sharded": engine_sharded,
     "serve": serve,
     "serve_transport": serve_transport,
+    "partial": partial,
     "kernels": kernels,
 }
 

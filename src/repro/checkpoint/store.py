@@ -5,6 +5,12 @@ lists) round-trips from the key paths.  Typed containers
 (:class:`repro.core.types.ServerState`) are stored as their field dicts and
 re-typed on load, so the server-state checkpoint format is unchanged from
 the raw-dict era — old checkpoints load into the new dataclass.
+
+List rebuild is GAP-PRESERVING: ``#i`` indices keep their positions and
+missing ones become ``None`` (an empty pytree node), so the *pruned*
+personal-subset trees of ``repro.core.subset`` — whose lists legitimately
+skip backbone slots — round-trip with their exact treedef.  Dense
+checkpoints have no gaps and rebuild exactly as before.
 """
 from __future__ import annotations
 
@@ -49,8 +55,11 @@ def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
             return node
         keys = list(node)
         if keys and all(k.startswith("#") for k in keys):
-            items = sorted(keys, key=lambda s: int(s[1:]))
-            return [rebuild(node[k]) for k in items]
+            # gap-preserving: position i stays at index i, absent indices
+            # rebuild as None (pruned-subset lists skip backbone slots)
+            by_idx = {int(k[1:]): node[k] for k in keys}
+            return [rebuild(by_idx[i]) if i in by_idx else None
+                    for i in range(max(by_idx) + 1)]
         return {k: rebuild(v) for k, v in node.items()}
 
     return rebuild(root)

@@ -7,3 +7,6 @@ from repro.core.server import (init_server_state, apply_update,  # noqa: F401
                                staleness_stats)
 from repro.core.maml import maml_grad, personalize_maml          # noqa: F401
 from repro.core.moreau import me_grad, personalize_me, solve_prox  # noqa: F401
+from repro.core.subset import (SubsetSpec, leaf_paths,           # noqa: F401
+                               merge_subset, subset_like,
+                               row_nbytes, tree_nbytes)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import PersAFLConfig, ServerState
+from repro.core.subset import merge_subset, subset_like
 from repro.kernels.fused_update.ops import (apply_delta_tree,
                                             apply_rows_tree, donate_argnums,
                                             spans_devices)
@@ -121,9 +122,22 @@ def _apply_rows_state_jit(donate: bool):
                        donate_argnums=donate_argnums(0) if donate else ())
     def apply(state, delta_stack, weights, count, staleness_max,
               staleness_sum, mode: str = "auto"):
+        params = state.params
+        if (jax.tree_util.tree_structure(delta_stack)
+                == jax.tree_util.tree_structure(params)):
+            # full-model stack: the original path, bit-for-bit
+            new_params = apply_rows_tree(params, delta_stack, weights,
+                                         mode=mode)
+        else:
+            # personal_subset stack (pruned structure, core.subset): apply
+            # only the subset leaves and pass the backbone through
+            # untouched.  The structure comparison is a trace-time Python
+            # branch — jit already caches per treedef, so no static args.
+            new_sub = apply_rows_tree(subset_like(params, delta_stack),
+                                      delta_stack, weights, mode=mode)
+            new_params = merge_subset(params, new_sub)
         return ServerState(
-            params=apply_rows_tree(state.params, delta_stack, weights,
-                                   mode=mode),
+            params=new_params,
             t=state.t + jnp.asarray(count, jnp.int32),
             staleness_sum=state.staleness_sum
             + jnp.asarray(staleness_sum, jnp.float32),
@@ -155,7 +169,11 @@ def admission_weights(capacity: int, rows: List[Tuple[int, int]], *,
         wt = beta / count
         if damping:
             wt *= (1.0 + tau) ** (-damping)
-        w[idx] = wt
+        # accumulate, don't overwrite: a row admitted twice in one window
+        # (user_cap >= 2, transport re-submits) contributes twice while the
+        # version counter t advances per admission — `w[idx] = wt` silently
+        # under-applied the duplicate and skewed mean_staleness
+        w[idx] += wt
     return w
 
 
@@ -193,6 +211,10 @@ def apply_admitted_rows(state: ServerState, delta_stack, weights, count,
     *later* window are computed against (τ ≤ τ_max) — donating the old
     buffer (in-place on TPU) would invalidate exactly those snapshots.
     ``weights`` normally comes from :func:`admission_weights`.
+
+    ``delta_stack`` may also be a *personal-subset* stack (the pruned
+    structure of ``repro.core.subset``): only the subset leaves are
+    rewritten and the shared backbone passes through bit-identically.
     """
     mode = "ref" if spans_devices(delta_stack) else "auto"
     return _apply_rows_state_jit(False)(state, delta_stack,

@@ -1,0 +1,251 @@
+"""Partial-model personalization: the ``personal_subset`` param-tree spec.
+
+"Sharper Convergence Guarantees for Federated Learning with Partial Model
+Personalization" (arXiv 2309.17409) splits the model into a shared backbone
+and a small per-user *personal subset* (head / last-k blocks / LoRA-style
+factors): only the subset is personalized per user, so only the subset
+needs per-user banking — the single biggest lever toward millions of
+resident users (ROADMAP).  This module is the one spelling of that split
+used by every layer: strategy (``repro.fl.api``), window apply
+(``repro.core.server``), serving ring/cache (``repro.serving``),
+checkpoints and the wire (``subset`` descriptor in transport headers).
+
+A :class:`SubsetSpec` is a frozen tuple of *path prefixes* in the
+checkpoint store's flat layout (``repro.checkpoint.store``): dict keys
+joined by ``/``, list/tuple indices spelled ``#i`` — e.g. ``("fc/#1",)``
+selects the last fully-connected layer of the fig2 CNN.  A prefix selects
+every leaf at or below it.  Specs also build from a *pytree bool mask*
+(True leaves are personal).
+
+Subset pytrees use the **pruned form**: dict keys with no selected leaf
+are dropped and unselected list slots become ``None`` (an empty pytree
+node, skipped by ``jax.tree.map``), trailing ``None`` slots trimmed.  The
+pruned form is closed under the npz codec — ``decode(encode(extract(t)))``
+has the same treedef as ``extract(t)`` — so bank rows, ring snapshots,
+checkpoints and wire frames all share one structure and every
+``tree.map`` between them lines up.
+
+All helpers are pure structural walks (no shape/value access beyond
+leaves), so they are trace-safe inside jit/vmap and work on tracers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Tuple
+
+import jax
+import numpy as np
+
+_MISSING = object()
+
+
+def _is_leaf(node) -> bool:
+    return not isinstance(node, (dict, list, tuple)) and node is not None
+
+
+def leaf_paths(tree) -> Tuple[str, ...]:
+    """Every leaf path of ``tree`` in the checkpoint store's flat spelling
+    (sorted dict keys irrelevant — paths are order-free)."""
+    out = []
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            for k in node:
+                walk(node[k], f"{prefix}{k}/")
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, f"{prefix}#{i}/")
+        elif node is None:
+            pass
+        else:
+            out.append(prefix[:-1])
+
+    walk(tree, "")
+    return tuple(sorted(out))
+
+
+@dataclasses.dataclass(frozen=True)
+class SubsetSpec:
+    """The personal subset of a param pytree, as flat path prefixes.
+
+    Hashable (usable as a jit static argument / dict key); equality is on
+    the normalized prefix tuple.  Matching is prefix-wise: leaf path ``p``
+    is personal iff some prefix ``q`` satisfies ``p == q`` or
+    ``p.startswith(q + "/")``.
+    """
+
+    prefixes: Tuple[str, ...]
+
+    # -- construction ------------------------------------------------------
+
+    @staticmethod
+    def resolve(spec, tree=None) -> Optional["SubsetSpec"]:
+        """Normalize any accepted spelling to a SubsetSpec (or None).
+
+        Accepted: None, a SubsetSpec, one path-prefix string, an iterable
+        of path-prefix strings, or a pytree bool mask (True leaves are
+        personal).  With ``tree`` given, the spec is validated against it
+        (:meth:`validate`).
+        """
+        if spec is None:
+            return None
+        if isinstance(spec, SubsetSpec):
+            out = spec
+        elif isinstance(spec, str):
+            out = SubsetSpec(tuple(p for p in spec.split(",") if p))
+        elif isinstance(spec, (list, tuple)) and spec \
+                and all(isinstance(p, str) for p in spec):
+            # a list/tuple of path prefixes (the descriptor spelling)
+            out = SubsetSpec(tuple(spec))
+        elif isinstance(spec, (dict, list, tuple)):
+            # pytree bool mask: collect the True leaf paths
+            paths = []
+
+            def walk(node, prefix):
+                if isinstance(node, dict):
+                    for k in node:
+                        walk(node[k], f"{prefix}{k}/")
+                elif isinstance(node, (list, tuple)):
+                    for i, v in enumerate(node):
+                        walk(v, f"{prefix}#{i}/")
+                elif node:
+                    paths.append(prefix[:-1])
+
+            walk(spec, "")
+            out = SubsetSpec(tuple(sorted(paths)))
+        elif isinstance(spec, Iterable):
+            out = SubsetSpec(tuple(str(p) for p in spec))
+        else:
+            raise TypeError(f"cannot build a SubsetSpec from {type(spec)}")
+        if not isinstance(out.prefixes, tuple) \
+                or not all(isinstance(p, str) for p in out.prefixes):
+            raise TypeError("SubsetSpec prefixes must be a tuple of paths")
+        if not out.prefixes:
+            raise ValueError("personal_subset selects no leaves")
+        if tree is not None:
+            out.validate(tree)
+        return out
+
+    @staticmethod
+    def from_descriptor(paths) -> "SubsetSpec":
+        """Rebuild from a wire/checkpoint descriptor (a list of paths)."""
+        return SubsetSpec(tuple(str(p) for p in paths))
+
+    # -- matching ----------------------------------------------------------
+
+    def _match(self, path: str) -> bool:
+        return any(path == q or path.startswith(q + "/")
+                   for q in self.prefixes)
+
+    def validate(self, tree) -> Tuple[str, ...]:
+        """Concrete personal leaf paths of ``tree``; raises if any prefix
+        matches nothing (a typo'd subset must fail loudly, not silently
+        personalize nothing)."""
+        paths = leaf_paths(tree)
+        for q in self.prefixes:
+            if not any(p == q or p.startswith(q + "/") for p in paths):
+                raise ValueError(
+                    f"personal_subset prefix {q!r} matches no param leaf; "
+                    f"leaves are {list(paths)[:8]}...")
+        return tuple(p for p in paths if self._match(p))
+
+    def descriptor(self, tree=None) -> list:
+        """JSON-able wire/checkpoint descriptor.  With ``tree`` given,
+        the resolved concrete leaf paths (what a client needs to merge a
+        subset head into its own backbone); otherwise the raw prefixes."""
+        return list(self.validate(tree)) if tree is not None \
+            else list(self.prefixes)
+
+    # -- structural transforms --------------------------------------------
+
+    def extract(self, tree):
+        """``tree`` restricted to the personal subset, in pruned form."""
+
+        def walk(node, prefix):
+            if isinstance(node, dict):
+                out = {}
+                for k in node:
+                    sub = walk(node[k], f"{prefix}{k}/")
+                    if sub is not _MISSING:
+                        out[k] = sub
+                return out if out else _MISSING
+            if isinstance(node, (list, tuple)):
+                subs = [walk(v, f"{prefix}#{i}/")
+                        for i, v in enumerate(node)]
+                if all(s is _MISSING for s in subs):
+                    return _MISSING
+                last = max(i for i, s in enumerate(subs)
+                           if s is not _MISSING)
+                return [None if s is _MISSING else s
+                        for s in subs[:last + 1]]
+            if node is None:
+                return _MISSING
+            return node if self._match(prefix[:-1]) else _MISSING
+
+        sub = walk(tree, "")
+        return {} if sub is _MISSING else sub
+
+    def mask(self, tree):
+        """``tree``-structured pytree of Python bools (True = personal).
+        Feed to ``jax.tree.map`` for masked updates, or map to ``0``/None
+        for vmap ``in_axes`` over mixed stacked-subset/shared-backbone
+        trees."""
+
+        def walk(node, prefix):
+            if isinstance(node, dict):
+                return {k: walk(v, f"{prefix}{k}/") for k, v in node.items()}
+            if isinstance(node, (list, tuple)):
+                out = [walk(v, f"{prefix}#{i}/") for i, v in enumerate(node)]
+                return type(node)(out) if isinstance(node, tuple) else out
+            if node is None:
+                return None
+            return self._match(prefix[:-1])
+
+        return walk(tree, "")
+
+
+def merge_subset(full, sub):
+    """``full`` with every leaf present in ``sub`` replaced by ``sub``'s.
+
+    Drives off ``full``'s structure and tolerates every pruned spelling of
+    ``sub`` — extract()'s form, the npz round-trip's form (missing keys,
+    gap lists), or None (nothing personal).  Trace-safe; the merge is how
+    a subset snapshot/head recombines with the shared backbone.
+    """
+    if sub is None:
+        return full
+    if isinstance(full, dict):
+        get = sub.get if isinstance(sub, dict) else (lambda k: None)
+        return {k: merge_subset(v, get(k)) for k, v in full.items()}
+    if isinstance(full, (list, tuple)):
+        n = len(sub) if isinstance(sub, (list, tuple)) else 0
+        out = [merge_subset(v, sub[i] if i < n else None)
+               for i, v in enumerate(full)]
+        return type(full)(out) if isinstance(full, tuple) else out
+    return sub
+
+
+def subset_like(full, sub):
+    """``full``'s leaves re-arranged into ``sub``'s pruned structure — the
+    params-side operand of a subset-shaped ``apply_rows`` (same treedef as
+    the subset delta stack)."""
+    if sub is None:
+        return None
+    if isinstance(sub, dict):
+        return {k: subset_like(full[k], v) for k, v in sub.items()}
+    if isinstance(sub, (list, tuple)):
+        return [subset_like(full[i], v) for i, v in enumerate(sub)]
+    return full
+
+
+def tree_nbytes(tree) -> int:
+    """Total leaf bytes of a pytree (host or device arrays)."""
+    return int(sum(int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+                   for x in jax.tree.leaves(tree)))
+
+
+def row_nbytes(stacked_tree) -> int:
+    """Bytes of ONE row of a stacked ``[capacity, ...]`` bank buffer — the
+    per-user unit the ``ring_bytes_per_user`` stat and bench gate count."""
+    return int(sum(int(np.prod(x.shape[1:])) * np.dtype(x.dtype).itemsize
+                   for x in jax.tree.leaves(stacked_tree)))

@@ -115,11 +115,20 @@ class Strategy:
 
     Instances are single-run objects: :meth:`bind` attaches the run's
     (pcfg, loss_fn) and resets any strategy-shared state.
+
+    ``personal_subset`` declares the *partial-model personalization* split
+    (arXiv 2309.17409): any :class:`repro.core.SubsetSpec` spelling — path
+    prefixes like ``("fc/#1",)`` or a pytree bool mask — naming the
+    personal leaves.  A strategy that honors it returns deltas in the
+    pruned subset structure (``SubsetSpec.extract``), so bank rows, ring
+    snapshots and wire frames shrink to the subset while the shared
+    backbone flows untouched; None (the default) keeps full-model deltas.
     """
 
     name = "strategy"
     option = "A"        # batch-split layout, for introspection
     stateful = False
+    personal_subset = None   # SubsetSpec spelling, or None = full model
 
     def bind(self, pcfg: PersAFLConfig, loss_fn: Callable) -> "Strategy":
         self.pcfg = pcfg
@@ -296,29 +305,47 @@ class PersonalizeStrategy(Strategy):
     directly consumable by the fused ``apply_rows`` server pass — this is
     the strategy behind :class:`repro.serving.PersonalizationServer`,
     replacing the old ``CohortEngine(client_fn=...)`` override.
+
+    With ``personal_subset`` set, only the subset is personalized: the
+    gradient / prox solve runs over the subset leaves with the backbone
+    *frozen* at the global params (partial-model personalization, arXiv
+    2309.17409), and the delta comes back in the pruned subset structure —
+    a bank row shrinks from full-model to head-only bytes.
     """
 
     name = "personalize"
 
-    def __init__(self, mode: str = "C"):
+    def __init__(self, mode: str = "C", personal_subset=None):
         if mode not in ("B", "C"):
             raise ValueError(f"unknown personalization mode {mode!r}; "
                              f"have ('B', 'C')")
         self.mode = mode
         self.option = mode
+        from repro.core.subset import SubsetSpec
+        self.personal_subset = SubsetSpec.resolve(personal_subset)
 
     def local_update(self, params, batch, cstate):
+        from repro.core.subset import merge_subset
+        spec = self.personal_subset
+        if spec is None:
+            sub0, loss_fn = params, self.loss_fn
+        else:
+            # personalize the subset against a frozen backbone: grad/prox
+            # run over the pruned subset tree, the closure re-merges it
+            # into the full params for the loss
+            sub0 = spec.extract(params)
+            loss_fn = lambda s, b: self.loss_fn(merge_subset(params, s), b)
         if self.mode == "B":
-            g = jax.grad(self.loss_fn)(params, batch)
+            g = jax.grad(loss_fn)(sub0, batch)
             delta = jax.tree.map(
                 lambda gg: self.pcfg.alpha * gg.astype(jnp.float32), g)
         else:
-            theta, _ = solve_prox(self.loss_fn, params, batch,
+            theta, _ = solve_prox(loss_fn, sub0, batch,
                                   self.pcfg.lam, self.pcfg.inner_eta,
                                   self.pcfg.inner_steps)
             delta = jax.tree.map(
                 lambda w, t: w.astype(jnp.float32) - t.astype(jnp.float32),
-                params, theta)
+                sub0, theta)
         return delta, None, {}
 
 

@@ -65,6 +65,12 @@ Strategy contract (PR 4, ``repro.fl.api``):
     DeltaBank like everyone else's.
   * The pre-PR-4 ``client_fn=`` override is a deprecated alias for a
     stateless strategy and will be removed next release.
+  * A strategy with ``personal_subset`` set returns deltas in the pruned
+    subset structure (``repro.core.subset``): the bank's stacked buffer —
+    and everything downstream of it (ring rows, head cache, wire frames) —
+    carries only the personal leaves.  The engine is structure-agnostic:
+    vmap/lax.map stack whatever the rule returns, and the shard_map path
+    uses pytree-prefix out_specs for the same reason.
 
 The per-event sequential path is kept behind ``vectorized=False`` as the
 baseline the ``engine`` benchmark row measures against.
@@ -284,11 +290,15 @@ class CohortEngine:
                 return jax.lax.map(lambda b: _one(params, b), stacked)
 
             def cohort_fn(params, stacked):
+                # out_specs is a pytree PREFIX: a bare P("cohort") covers
+                # whatever structure the strategy's delta takes — full
+                # params-shaped or a pruned personal_subset tree (which a
+                # params-shaped spec tree could not describe)
                 return shard_map_compat(
                     _shard_body, mesh=self._mesh,
                     in_specs=(jax.tree.map(lambda _: P(), params),
                               jax.tree.map(lambda _: P("cohort"), stacked)),
-                    out_specs=jax.tree.map(lambda _: P("cohort"), params),
+                    out_specs=P("cohort"),
                     manual_axes=("cohort",))(params, stacked)
 
             def _shard_body_s(params, stacked, cstates, shared):

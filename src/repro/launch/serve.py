@@ -12,6 +12,12 @@ step-by-step because each token depends on the previous argmax.
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
       --personalize --requests 4 --tokens 16
 
+``--personal-subset PREFIXES`` switches personalization to partial-model
+(head-only) form: only the named param subtrees are personalized, banked,
+and stacked per user; decode merges the stacked heads over the one shared
+backbone and vmaps with ``in_axes=None`` on backbone leaves, so backbone
+memory stays O(1) in the user count.
+
 ``--listen PORT`` swaps the one-shot decode for a network front-end: the
 PersonalizationServer is wrapped in a
 :class:`repro.serving.transport.TransportServer` and a second OS process
@@ -112,17 +118,32 @@ def _decode_shared(cfg, params, prompt, max_len, prompt_len):
     return jnp.concatenate(generated, axis=1) if generated else None
 
 
-def _decode_personalized(cfg, heads, prompt, max_len, prompt_len):
+def _decode_personalized(cfg, heads, prompt, max_len, prompt_len,
+                         params=None, spec=None):
     """Per-user decode: every request carries its own personalized head, so
-    params/cache/tokens all vmap over the user axis (inner batch of 1)."""
+    params/cache/tokens all vmap over the user axis (inner batch of 1).
+
+    With a ``personal_subset`` (``spec``/``params`` given) ``heads`` is a
+    stacked *subset* tree; merging it over the shared backbone yields a
+    mixed tree whose personal leaves carry the user axis and whose backbone
+    leaves do not, and a pytree ``in_axes`` (0 on personal leaves, None on
+    backbone) vmaps it without replicating the backbone per user.
+    """
+    if spec is not None:
+        from repro.core.subset import merge_subset
+        heads = merge_subset(params, heads)
+        p_axes = jax.tree.map(lambda m: 0 if m else None, spec.mask(params))
+    else:
+        p_axes = 0
     prompt_u = prompt[:, None, :]                      # [U, 1, L]
     init = jax.vmap(lambda p, t: api.init_cache(
-        cfg, p, _init_batch(cfg, t[:, :1]), max_len, cfg.activation_dtype))
+        cfg, p, _init_batch(cfg, t[:, :1]), max_len, cfg.activation_dtype),
+        in_axes=(p_axes, 0))
     cache = init(heads, prompt_u)
-    prefill = jax.jit(jax.vmap(make_prefill(cfg)))
+    prefill = jax.jit(jax.vmap(make_prefill(cfg), in_axes=(p_axes, 0, 0)))
     step = jax.jit(jax.vmap(
         lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos),
-        in_axes=(0, 0, 0, None)))
+        in_axes=(p_axes, 0, 0, None)))
     cache = prefill(heads, cache, prompt_u)
     tok = prompt_u[:, :, -1:]                          # [U, 1, 1]
     generated = []
@@ -184,6 +205,11 @@ def main():
     ap.add_argument("--mode", choices=("B", "C"), default="C",
                     help="personalization mode: B = one-step MAML "
                          "fine-tune, C = Moreau prox solve")
+    ap.add_argument("--personal-subset", default=None, metavar="PREFIXES",
+                    help="comma-separated param-path prefixes (checkpoint "
+                         "spelling, e.g. 'head' or 'blocks/#11') — only "
+                         "these leaves are personalized per user; the "
+                         "backbone stays shared and is never banked")
     ap.add_argument("--lam", type=float, default=30.0)
     ap.add_argument("--alpha", type=float, default=0.01)
     ap.add_argument("--inner-steps", type=int, default=5)
@@ -223,7 +249,9 @@ def main():
 
     heads = None
     server_stats = None
+    subset_spec = None
     if args.personalize:
+        from repro.core.subset import SubsetSpec
         from repro.serving import PersonalizationServer
         plen = _personalize_len(cfg, args.personalize_len
                                 if args.personalize_len is not None
@@ -231,9 +259,11 @@ def main():
         loss = lambda p, b: api.loss_fn(cfg, p, b)          # noqa: E731
         pcfg = PersAFLConfig(option="C", lam=args.lam, alpha=args.alpha,
                              inner_steps=args.inner_steps, inner_eta=0.01)
+        subset_spec = SubsetSpec.resolve(args.personal_subset, params)
         server = PersonalizationServer(params, loss, pcfg,
                                        modes=(args.mode,),
-                                       max_pending=max(B, 1))
+                                       max_pending=max(B, 1),
+                                       personal_subset=subset_spec)
         if args.listen is not None:
             _serve_transport(args, server)
             return
@@ -253,7 +283,8 @@ def main():
     t0 = time.time()
     if heads is not None:
         out_tokens = _decode_personalized(cfg, heads, prompt, max_len,
-                                          args.prompt_len)
+                                          args.prompt_len,
+                                          params=params, spec=subset_spec)
     else:
         out_tokens = _decode_shared(cfg, params, prompt, max_len,
                                     args.prompt_len)
@@ -266,7 +297,11 @@ def main():
     os.makedirs(args.out, exist_ok=True)
     record = {"arch": cfg.arch_id, "tok_per_s": tps,
               "personalized": args.personalize, "mode": args.mode,
-              "users": B}
+              "users": B,
+              "personal_subset": (subset_spec.descriptor()
+                                  if subset_spec is not None else None)}
+    if server_stats is not None:
+        record["ring_bytes_per_user"] = server_stats["ring_bytes_per_user"]
     if server_stats is not None:
         record["host_materializations"] = \
             server_stats["host_materializations"]

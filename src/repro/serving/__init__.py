@@ -14,6 +14,19 @@ Batcher **modes** map to the paper's personalization options:
     prox solve, ``head_i = θ̃_i(w) ≈ argmin_θ f_i(θ) + λ/2‖θ − w‖²`` via K
     inner SGD steps.  Stronger personalization; K grads.
 
+Both modes compose with **partial-model personalization** (arXiv
+2309.17409): pass ``personal_subset`` (a :class:`repro.core.subset
+.SubsetSpec` or any spelling it resolves) to
+:class:`PersonalizationServer` and only that subset of the param tree is
+personalized — grads/prox run over the subset with the backbone frozen,
+the DeltaRing banks subset-shaped rows (one shared backbone serves every
+retained window exactly, not approximately), the head cache holds subset
+heads, and transport frames carry subset pytrees plus a ``subset``
+descriptor header.  ``stats["ring_bytes_per_user"]`` reports the
+steady-state per-user residency (one delta row + one head row); with a
+head-only subset it shrinks by the head:model size ratio, which is the
+lever toward millions of resident users.
+
 Parts:
 
   * :mod:`repro.serving.batcher` — request queue + micro-batcher:
@@ -22,12 +35,15 @@ Parts:
     shard_map over the ``("cohort",)`` mesh, users keyed to shards).
   * :mod:`repro.serving.bank` — :class:`DeltaRing`: persistent sharded
     DeltaBank ring-buffer holding the last W windows of stacked deltas and
-    params snapshots on device; straggler rows re-weight into the next
-    window's ``apply_rows`` weight vector (τ ≤ τ_max) instead of dropping.
+    params snapshots (subset-pruned when a ``personal_subset`` is set) on
+    device; straggler rows re-weight into the next window's ``apply_rows``
+    weight vector (τ ≤ τ_max) instead of dropping.
   * :mod:`repro.serving.server` — :class:`PersonalizationServer`:
-    submit/poll semantics, device-resident per-user head cache, window
-    advance folding served deltas back into the global model, steady-state
-    zero ``host_materializations``.
+    submit/poll semantics (polls resolve through each ticket's own
+    (bank, row) handle, never another ticket's for the same user),
+    device-resident per-user head cache, window advance folding served
+    deltas back into the global model, steady-state zero
+    ``host_materializations``.
   * :mod:`repro.serving.transport` — :class:`TransportServer` /
     :class:`TransportClient`: the asyncio socket front-end that makes the
     server network-addressable (length-prefixed JSON + npz frames:

@@ -31,12 +31,24 @@ users simply re-personalize against the restored snapshots.
 Fairness: ``user_cap`` bounds the delta rows one user may have admitted
 into a single window's apply (the ring is the admission authority; the
 micro-batcher's matching cap refuses over-cap requests pre-cohort).
+
+Partial-model personalization (``subset=``): with a ``personal_subset``
+declared, every banked row and every retained snapshot holds only the
+personal leaves (the pruned structure of ``repro.core.subset``) — the
+shared backbone is stored ONCE (``_base``) and recombined on demand, so
+per-user ring residency shrinks from full-model to subset bytes
+(``row_nbytes``; the ``ring_bytes_per_user`` stat and bench gate).  This
+is exact, not approximate: subset applies never touch backbone leaves, so
+one backbone serves every retained window bit-for-bit.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import admission_weights, apply_admitted_rows
+from repro.core.subset import SubsetSpec, merge_subset
+from repro.core.subset import row_nbytes as _row_nbytes
 from repro.core.types import ServerState
 from repro.fl.engine import DeltaBank
 
@@ -53,17 +65,33 @@ class DeltaRing:
 
     def __init__(self, params0, *, windows: int = 4,
                  tau_max: Optional[int] = None,
-                 user_cap: Optional[int] = None):
+                 user_cap: Optional[int] = None, subset=None):
         if windows < 1:
             raise ValueError("need at least one retained window")
         self.windows = windows
         # a straggler can only be recomputed against a retained snapshot,
-        # so the staleness bound never exceeds the ring depth
-        self.tau_max = min(tau_max, windows - 1) if tau_max is not None \
+        # so the EFFECTIVE staleness bound never exceeds the ring depth —
+        # but the REQUESTED value is kept (and checkpointed): restoring
+        # this ring into a deeper one must widen back to the request, not
+        # keep the accidentally-tightened clamp.
+        self.tau_max_requested = int(tau_max) if tau_max is not None \
             else windows - 1
+        if tau_max is not None and tau_max > windows - 1:
+            warnings.warn(
+                f"tau_max={tau_max} exceeds the ring depth; clamped to "
+                f"{windows - 1} (a straggler can only be recomputed against "
+                f"a retained snapshot).  The requested value is preserved "
+                f"for checkpoint round-trips.", stacklevel=2)
+        self.tau_max = min(self.tau_max_requested, windows - 1)
         self.user_cap = user_cap
+        self.subset = SubsetSpec.resolve(subset, params0)
+        # subset mode: snapshots store only the personal leaves; the shared
+        # backbone lives once here and is updated by reference each advance
+        # (subset applies never change it, so it is valid for EVERY window)
+        self._base = params0
+        self.row_nbytes: Optional[int] = None  # set at first retained bank
         self.current = 0
-        self._snapshots: Dict[int, object] = {0: params0}
+        self._snapshots: Dict[int, object] = {0: self._store(params0)}
         self._banks: Dict[int, List[DeltaBank]] = {0: []}
         # (bank, row, τ) admitted to the window currently accumulating
         self._pending: List[Tuple[DeltaBank, int, int]] = []
@@ -76,14 +104,32 @@ class DeltaRing:
 
     # -- retention ---------------------------------------------------------
 
+    def _store(self, params):
+        """What a window snapshot physically retains: the personal subset
+        only (pruned tree) in subset mode, the full params otherwise."""
+        return self.subset.extract(params) if self.subset is not None \
+            else params
+
     def snapshot(self, window: int):
-        """Params the given window's cohorts were computed against."""
+        """FULL params the given window's cohorts were computed against
+        (subset snapshots recombine with the shared backbone on demand)."""
+        snap = self._snapshots[window]
+        if self.subset is not None:
+            return merge_subset(self._base, snap)
+        return snap
+
+    def subset_snapshot(self, window: int):
+        """The window's snapshot as physically stored — the pruned subset
+        tree in subset mode (what head computation subtracts subset delta
+        stacks from), the full params otherwise."""
         return self._snapshots[window]
 
     def retain(self, bank: DeltaBank) -> None:
         """Bank-handoff hook: pin ``bank`` to the current window so its
         device buffer outlives the window (stragglers, head gathers)."""
         self._banks[self.current].append(bank)
+        if self.row_nbytes is None and len(bank):
+            self.row_nbytes = _row_nbytes(bank.stacked)
 
     def lookup(self, user):
         """-> (window, bank, row) of the user's latest admitted delta, or
@@ -165,7 +211,8 @@ class DeltaRing:
         self._user_rows = {}
         self.stats["windows"] += 1
         self.current += 1
-        self._snapshots[self.current] = state.params
+        self._base = state.params
+        self._snapshots[self.current] = self._store(state.params)
         self._banks[self.current] = []
         horizon = self.current - self.windows + 1
         for w in [w for w in self._snapshots if w < horizon]:

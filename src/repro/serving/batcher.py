@@ -40,11 +40,16 @@ from repro.fl.engine import CohortEngine, DeltaBank
 MODES = ("B", "C")
 
 
-def personalize_strategy(pcfg: PersAFLConfig, loss_fn: Callable, mode: str):
+def personalize_strategy(pcfg: PersAFLConfig, loss_fn: Callable, mode: str,
+                         personal_subset=None):
     """The bound ``strategy("personalize", mode=...)`` behind one batcher
     mode — the registry rule whose ``local_update`` maps
-    ``(params, batch)`` to the personalization delta (head = w − delta)."""
-    return _strategy("personalize", mode=mode).bind(pcfg, loss_fn)
+    ``(params, batch)`` to the personalization delta (head = w − delta).
+    With ``personal_subset`` set, the delta covers only the personal
+    leaves (pruned subset structure; backbone frozen) and every bank row
+    downstream shrinks accordingly."""
+    return _strategy("personalize", mode=mode,
+                     personal_subset=personal_subset).bind(pcfg, loss_fn)
 
 
 def personalize_delta_fn(pcfg: PersAFLConfig, loss_fn: Callable,
@@ -62,12 +67,23 @@ def personalize_delta_fn(pcfg: PersAFLConfig, loss_fn: Callable,
 
 @dataclasses.dataclass
 class Ticket:
-    """Submit/poll handle for one personalization request."""
+    """Submit/poll handle for one personalization request.
+
+    A "done" ticket carries its OWN result handle — ``head`` is the
+    (heads DeltaBank, row) pair its flush produced and ``window`` the ring
+    window it was served in — so polling an older ticket after a newer
+    flush returns *that ticket's* head, never silently the newest one
+    (resolving by user aliased them).  Once ``window`` retires from the
+    ring the ticket is superseded-and-retired and polls fail explicitly.
+    """
     user: object
     mode: str
     stamp: int                 # ring window the request was submitted in
     status: str = "queued"     # queued | done | dropped | capped
     tau: int = 0               # staleness in windows, set at drain time
+    window: int = -1           # ring window the ticket was SERVED in
+    head: Optional[tuple] = dataclasses.field(  # (heads bank, row)
+        default=None, repr=False, compare=False)
 
 
 def _pow2(k: int) -> int:

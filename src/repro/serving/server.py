@@ -21,10 +21,27 @@ tensor to the host — heads are device-side gathers from stacked head banks
 and ``stats["host_materializations"]`` stays 0 (pinned by tests and the
 ``serve`` benchmark row).
 
+Result handles are **per ticket**: every "done" ticket owns the
+(heads bank, row) pair its flush produced, so polling an older ticket
+after a newer flush returns that ticket's head — never silently the
+newest one — and a ticket whose window has retired from the ring fails
+explicitly as superseded-and-retired.
+
+Partial-model personalization: construct with ``personal_subset=`` (any
+``repro.core.SubsetSpec`` spelling, e.g. ``("fc/#1",)``) and only the
+personal leaves are banked — delta rows, head rows, ring snapshots and
+the head cache all shrink to the subset while the shared backbone flows
+once on the buffered path (``stats["ring_bytes_per_user"]`` reports the
+per-user ring residency this buys; the ``partial`` bench gates it).
+Served heads are subset pytrees; callers merge them over the global
+backbone with ``repro.core.merge_subset``.
+
 This surface is in-process; other processes reach it over the socket
 front-end (:class:`repro.serving.transport.TransportServer` bridges
 concurrent connections into submit/flush/poll with deadline-driven flush
-timers and explicit backpressure — see that module for the wire protocol).
+timers and explicit backpressure — see that module for the wire protocol;
+subset-serving servers require clients to declare ``subset_ok`` and stamp
+replies with the subset descriptor).
 """
 from __future__ import annotations
 
@@ -36,6 +53,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint.store import load_meta, load_pytree, save_pytree
 from repro.core import init_server_state, staleness_stats
+from repro.core.subset import SubsetSpec
 from repro.core.types import PersAFLConfig, ServerState
 from repro.fl.engine import CohortEngine, DeltaBank
 from repro.serving.bank import DeltaRing
@@ -65,6 +83,8 @@ class PersonalizationServer:
     head_cache  : max cached per-user head handles (LRU)
     user_cap    : fairness bound — max delta rows one user may have
                   admitted into a single aggregation window (None = off)
+    personal_subset : the personal param subset (SubsetSpec spelling);
+                  None = full-model personalization
 
     Each mode's cohort engine is driven by the registry strategy
     ``repro.fl.api.strategy("personalize", mode=...)`` — the serving rules
@@ -75,19 +95,24 @@ class PersonalizationServer:
                  pcfg: PersAFLConfig, *, cohort_impl: str = "auto",
                  modes: Iterable[str] = MODES, windows: int = 4,
                  tau_max: Optional[int] = None, max_pending: int = 64,
-                 head_cache: int = 4096, user_cap: Optional[int] = None):
+                 head_cache: int = 4096, user_cap: Optional[int] = None,
+                 personal_subset=None):
         self.pcfg = pcfg
         self.loss_fn = loss_fn
         self.state = init_server_state(_own_copy(init_params))
         self.max_pending = max_pending
         self.head_cache = head_cache
+        self.personal_subset = SubsetSpec.resolve(personal_subset,
+                                                 self.state.params)
 
         engines: Dict[str, CohortEngine] = {}
         shared_stats = None
         for mode in modes:
             eng = CohortEngine(
                 pcfg, loss_fn, cohort_impl=cohort_impl,
-                strategy=personalize_strategy(pcfg, loss_fn, mode))
+                strategy=personalize_strategy(
+                    pcfg, loss_fn, mode,
+                    personal_subset=self.personal_subset))
             if shared_stats is None:
                 shared_stats = eng.stats
             else:
@@ -99,7 +124,8 @@ class PersonalizationServer:
         self._engine_stats = shared_stats
 
         self.ring = DeltaRing(self.state.params, windows=windows,
-                              tau_max=tau_max, user_cap=user_cap)
+                              tau_max=tau_max, user_cap=user_cap,
+                              subset=self.personal_subset)
         for eng in engines.values():
             eng.add_bank_hook(self.ring.retain)   # bank handoff
         n_shards = max(eng._ndev for eng in engines.values())
@@ -144,8 +170,11 @@ class PersonalizationServer:
         for mode, stamp, bank, placed in self.batcher.drain(
                 self.ring.current, self.ring.snapshot,
                 tau_max=self.ring.tau_max):
+            # subset mode: the delta stack is subset-shaped, so the head
+            # subtraction runs against the snapshot's stored subset tree
+            # (same pruned structure) — heads are subset pytrees
             heads = DeltaBank(
-                stacked=self._jit_heads(self.ring.snapshot(stamp),
+                stacked=self._jit_heads(self.ring.subset_snapshot(stamp),
                                         bank.stacked),
                 k=bank.k, stats=self._engine_stats)
             self.ring.retain(heads)   # head rows live as long as the bank
@@ -162,16 +191,24 @@ class PersonalizationServer:
                     ticket.status = verdict
                     continue
                 self._cache_head(ticket.user, heads, row)
+                # the ticket owns its result: poll resolves THIS handle,
+                # not whatever head the user's latest flush produced
+                ticket.head = (heads, row)
+                ticket.window = self.ring.current
                 ticket.status = "done"
                 served += 1
         return served
 
     def poll(self, ticket: Ticket):
-        """None while queued; the user's head pytree once served.
+        """None while queued; THIS ticket's head pytree once served.
 
-        Raises on dropped tickets (the staleness bound was exceeded) and
-        on served-but-evicted heads (LRU cache pressure) — both mean the
-        user must re-submit against a fresh snapshot.
+        The head comes from the ticket's own (bank, row) handle — polling
+        an older ticket after a newer flush for the same user returns the
+        older head, it is never silently aliased to the newest one.  Raises
+        on dropped tickets (staleness bound exceeded), capped tickets
+        (fairness), and superseded-and-retired tickets (the ticket's ring
+        window rotated out: its bank is gone) — all mean the user must
+        re-submit against a fresh snapshot.
         """
         if ticket.status == "queued":
             return None
@@ -184,11 +221,23 @@ class PersonalizationServer:
                 f"request for {ticket.user!r} exceeded the per-window "
                 f"fairness cap (user_cap={self.batcher.user_cap}); "
                 f"re-submit next window")
-        if ticket.user not in self._heads:
+        if ticket.head is None:
+            # handle-less done ticket (constructed by hand / pre-restart):
+            # the cache is the only resolver left
+            if ticket.user not in self._heads:
+                raise RuntimeError(
+                    f"head for {ticket.user!r} was evicted from the cache "
+                    f"(head_cache={self.head_cache}); re-submit")
+            return self.head(ticket.user)
+        horizon = self.ring.current - self.ring.windows + 1
+        if ticket.window < horizon:
+            ticket.head = None   # the bank is gone; drop our pin on it
             raise RuntimeError(
-                f"head for {ticket.user!r} was evicted from the cache "
-                f"(head_cache={self.head_cache}); re-submit")
-        return self.head(ticket.user)
+                f"ticket for {ticket.user!r} was superseded and retired: "
+                f"served in window {ticket.window}, ring horizon is "
+                f"{horizon} (windows={self.ring.windows}); re-submit")
+        heads, row = ticket.head
+        return jax.tree.map(lambda x: x[row], heads.stacked)
 
     def _cache_head(self, user, heads: DeltaBank, row: int) -> None:
         self._heads[user] = (heads, row)
@@ -256,9 +305,16 @@ class PersonalizationServer:
                                for w, snap in self.ring._snapshots.items()},
             "head_stack": self.stacked_heads(users) if users else None,
         }
+        # tau_max persists as REQUESTED, not as clamped to this ring's
+        # depth: restoring into a deeper ring must widen back to the
+        # request (the clamp is a property of the ring, not of the config)
         meta = {"users": users, "ring_current": self.ring.current,
-                "windows": self.ring.windows, "tau_max": self.ring.tau_max,
+                "windows": self.ring.windows,
+                "tau_max": self.ring.tau_max_requested,
                 "user_cap": self.ring.user_cap,
+                "personal_subset":
+                    self.personal_subset.descriptor(self.state.params)
+                    if self.personal_subset is not None else None,
                 "ring_stats": {k: int(v)
                                for k, v in self.ring.stats.items()}}
         save_pytree(path, tree, meta=meta)
@@ -268,18 +324,26 @@ class PersonalizationServer:
                 **kw) -> "PersonalizationServer":
         """Rebuild a server from :meth:`save`'s checkpoint (warm start).
 
-        Ring depth / staleness bound / fairness cap come from the
-        checkpoint; ``**kw`` forwards the process-local knobs
-        (``cohort_impl``, ``modes``, ``max_pending``, ``head_cache``).
-        Head-cache users must be JSON-serializable keys (strings in
-        practice) — they round-trip through the sidecar meta file.
+        Ring depth / staleness bound / fairness cap / personal subset come
+        from the checkpoint, but any of them may be overridden through
+        ``**kw`` (e.g. restore into a deeper ring with ``windows=8`` — the
+        checkpointed *requested* ``tau_max`` then re-clamps against the new
+        depth, not the old one).  ``**kw`` otherwise forwards the
+        process-local knobs (``cohort_impl``, ``modes``, ``max_pending``,
+        ``head_cache``).  Head-cache users must be JSON-serializable keys
+        (strings in practice) — they round-trip through the sidecar meta.
         """
         tree = load_pytree(path)
         meta = load_meta(path)
         state = ServerState.from_dict(
             jax.tree.map(jnp.asarray, tree["server_state"]))
-        srv = cls(state.params, loss_fn, pcfg, windows=meta["windows"],
-                  tau_max=meta["tau_max"], user_cap=meta["user_cap"], **kw)
+        windows = kw.pop("windows", meta["windows"])
+        tau_max = kw.pop("tau_max", meta.get("tau_max"))
+        user_cap = kw.pop("user_cap", meta.get("user_cap"))
+        subset = kw.pop("personal_subset", meta.get("personal_subset"))
+        srv = cls(state.params, loss_fn, pcfg, windows=windows,
+                  tau_max=tau_max, user_cap=user_cap,
+                  personal_subset=subset, **kw)
         srv.state = state
         snapshots = {int(k[1:]): jax.tree.map(jnp.asarray, snap)
                      for k, snap in tree["ring_snapshots"].items()}
@@ -304,6 +368,12 @@ class PersonalizationServer:
         s.update({f"batcher_{k}": v for k, v in self.batcher.stats.items()})
         s["live_banks"] = self.ring.live_banks
         s["cached_heads"] = len(self._heads)
+        # per-user steady-state ring residency: one delta row + one head
+        # row per served user per window (both row-shaped, so 2x the bank
+        # row bytes) — the number the partial-personalization bench gates
+        row = self.ring.row_nbytes or 0
+        s["ring_row_bytes"] = row
+        s["ring_bytes_per_user"] = 2 * row
         return s
 
     def staleness(self) -> Dict:

@@ -18,16 +18,29 @@ Wire protocol (version 1) — length-prefixed JSON + binary frames::
 
 All u32 are big-endian.  Client → server ops and their replies:
 
-    SUBMIT {user, mode}  + npz(batch)  → OK {ticket, window}
+    SUBMIT {user, mode, subset_ok?}  + npz(batch)
+                                       → OK {ticket, window}
                                          | BUSY {scope, open}
-    POLL   {ticket, wait_ms?}          → OK {status:"queued"}
-                                         | OK {status:"done"} + npz(head)
+    POLL   {ticket, wait_ms?, subset_ok?}
+                                       → OK {status:"queued"}
+                                         | OK {status:"done", subset?}
+                                           + npz(head)
                                          | ERR {code: dropped|capped|
-                                                evicted, error}
-    HEAD   {user}                      → OK + npz(head) | ERR unknown_user
-    STATS  {}                          → OK {stats: {...}}
+                                                evicted|superseded, error}
+    HEAD   {user, subset_ok?}          → OK {subset?} + npz(head)
+                                         | ERR unknown_user
+    STATS  {}                          → OK {stats: {...}, subset?}
     FLUSH  {}                          → OK {served}
     ADVANCE{}                          → OK {window}
+
+Subset negotiation: when the fronted server personalizes a
+``personal_subset`` only, head bodies are *subset pytrees* (pruned
+structure; merge over the global backbone with
+``repro.core.merge_subset``).  A v1 client that does not declare
+``subset_ok: true`` on SUBMIT/POLL/HEAD gets a typed
+``ERR subset_unsupported`` instead of a silently-partial pytree; replies
+that carry a subset body stamp the resolved leaf paths in the header's
+``subset`` key (both clients record it as ``.last_subset``).
 
 Deadline-driven flushing: a SUBMIT that fills the underlying server's
 ``max_pending`` queue flushes synchronously (the micro-batch path); a
@@ -92,9 +105,12 @@ class TransportError(RuntimeError):
     """Application-level ERR reply surfaced client-side.
 
     ``code`` mirrors the server's refusal cause: ``dropped`` (staleness
-    past tau_max), ``capped`` (per-window fairness cap), ``evicted`` (LRU
-    head-cache pressure), ``unknown_user`` / ``unknown_ticket`` /
-    ``bad_request``.
+    past tau_max), ``capped`` (per-window fairness cap), ``superseded``
+    (the ticket's ring window retired before it was polled), ``evicted``
+    (LRU head-cache pressure on a handle-less ticket),
+    ``subset_unsupported`` (the server serves personal-subset heads and
+    the client did not declare ``subset_ok``), ``unknown_user`` /
+    ``unknown_ticket`` / ``bad_request``.
     """
 
     def __init__(self, code: str, message: str):
@@ -250,6 +266,11 @@ class TransportServer:
                  max_inflight: int = 256, conn_inflight: int = 64):
         self.server = server
         self.host = host
+        spec = getattr(server, "personal_subset", None)
+        # resolved once: the leaf paths stamped into subset reply headers
+        # and matched against clients' subset_ok declarations
+        self._subset_desc = spec.descriptor(server.params) \
+            if spec is not None else None
         self.requested_port = port
         self.flush_ms = flush_ms
         self.window_ms = window_ms
@@ -368,29 +389,45 @@ class TransportServer:
         dispatches and a device sync per POLL — the wire must not forfeit
         the batching the cohort call just won.
 
-        Refused tickets (dropped/capped) — and the rare LRU-evicted head,
-        which the per-POLL fallback reports — carry no body and resolve
-        without encoding.  (An executor-thread variant of the blocking
+        Refused tickets (dropped/capped) — and handle-less done tickets,
+        which the per-POLL fallback resolves — carry no body here.  The
+        gather is PER TICKET HANDLE, not per user: each record's head
+        comes from its own ticket's (bank, row), grouped by bank into one
+        ``jnp.take`` + one transfer each (steady state: one bank per
+        flush), so an older ticket's body is never aliased to the user's
+        newest head.  (An executor-thread variant of the blocking
         ``device_get`` was measured and rejected: on CPU the PJRT
         client serializes with the loop thread's dispatches and the hop
         costs more than it overlaps.)"""
         done = []
+        horizon = self.server.window - self.server.ring.windows + 1
         for conn in self._conns:
             for rec in conn.records.values():
                 if rec.ticket.status != "queued" and not rec.event.is_set():
+                    # retired-window tickets are NOT encoded: their poll
+                    # must report superseded, not a stale body
                     if rec.ticket.status == "done" \
-                            and rec.user in self.server._heads:
+                            and rec.ticket.head is not None \
+                            and rec.ticket.window >= horizon:
                         done.append(rec)
                     else:
                         rec.event.set()
         if not done:
             return
         import jax
-        host = jax.device_get(
-            self.server.stacked_heads([r.user for r in done]))
-        for i, rec in enumerate(done):
-            rec.encoded = encode_pytree(jax.tree.map(lambda x: x[i], host))
-            rec.event.set()
+        import jax.numpy as jnp
+        groups: Dict[int, Tuple[object, list]] = {}
+        for rec in done:
+            bank, row = rec.ticket.head
+            groups.setdefault(id(bank), (bank, []))[1].append((rec, row))
+        for bank, pairs in groups.values():
+            rows = jnp.asarray([r for _, r in pairs], jnp.int32)
+            host = jax.device_get(jax.tree.map(
+                lambda x: jnp.take(x, rows, axis=0), bank.stacked))
+            for i, (rec, _) in enumerate(pairs):
+                rec.encoded = encode_pytree(
+                    jax.tree.map(lambda x: x[i], host))
+                rec.event.set()
 
     # -- connection handling -----------------------------------------------
 
@@ -467,8 +504,23 @@ class TransportServer:
         return {"op": "ERR", "code": "unknown_op",
                 "error": f"unknown op {op!r}"}, b""
 
+    def _subset_refusal(self, header: Dict) -> Optional[Tuple[Dict, bytes]]:
+        """Typed ERR for pre-subset clients against a subset server: a head
+        body would be a *partial* pytree — a client that has not declared
+        ``subset_ok`` would silently treat it as the full model."""
+        if self._subset_desc is not None and not header.get("subset_ok"):
+            return {"op": "ERR", "code": "subset_unsupported",
+                    "error": "server personalizes a param subset "
+                             f"(subset={self._subset_desc}); declare "
+                             "subset_ok and merge heads with "
+                             "repro.core.merge_subset"}, b""
+        return None
+
     def _op_submit(self, conn: _Conn, header: Dict,
                    body: bytes) -> Tuple[Dict, bytes]:
+        refusal = self._subset_refusal(header)
+        if refusal is not None:
+            return refusal
         user = header["user"]
         mode = header.get("mode", "C")
         busy_scope = None
@@ -532,6 +584,9 @@ class TransportServer:
 
     async def _op_poll(self, conn: _Conn,
                        header: Dict) -> Tuple[Dict, bytes]:
+        refusal = self._subset_refusal(header)
+        if refusal is not None:
+            return refusal
         tid = int(header["ticket"])
         rec = conn.records.get(tid)
         if rec is None:
@@ -557,25 +612,38 @@ class TransportServer:
         # terminal either way: the backpressure slot frees NOW
         del conn.records[tid]
         self._inflight -= 1
+        ok = {"op": "OK", "status": "done", "window": self.server.window}
+        if self._subset_desc is not None:
+            ok["subset"] = self._subset_desc
         if rec.encoded is not None:
-            return ({"op": "OK", "status": "done",
-                     "window": self.server.window}, rec.encoded)
+            return ok, rec.encoded
         try:
             head = self.server.poll(rec.ticket)
         except RuntimeError as e:
-            code = status if status in ("dropped", "capped") else "evicted"
+            if status in ("dropped", "capped"):
+                code = status
+            elif rec.ticket.window >= 0 and rec.ticket.window < (
+                    self.server.window - self.server.ring.windows + 1):
+                code = "superseded"
+            else:
+                code = "evicted"
             return {"op": "ERR", "code": code, "error": str(e)}, b""
-        return ({"op": "OK", "status": "done",
-                 "window": self.server.window}, encode_pytree(head))
+        return ok, encode_pytree(head)
 
     def _op_head(self, header: Dict) -> Tuple[Dict, bytes]:
+        refusal = self._subset_refusal(header)
+        if refusal is not None:
+            return refusal
         user = header["user"]
         try:
             head = self.server.head(user)
         except KeyError:
             return {"op": "ERR", "code": "unknown_user",
                     "error": f"no cached head for {user!r}"}, b""
-        return {"op": "OK", "user": user}, encode_pytree(head)
+        ok = {"op": "OK", "user": user}
+        if self._subset_desc is not None:
+            ok["subset"] = self._subset_desc
+        return ok, encode_pytree(head)
 
     def _op_stats(self) -> Tuple[Dict, bytes]:
         stats = _jsonable(self.server.stats)
@@ -583,7 +651,10 @@ class TransportServer:
                       for k, v in _jsonable(self.stats).items()})
         stats["transport_inflight"] = self._inflight
         stats["window"] = self.server.window
-        return {"op": "OK", "stats": stats}, b""
+        ok = {"op": "OK", "stats": stats}
+        if self._subset_desc is not None:
+            ok["subset"] = self._subset_desc
+        return ok, b""
 
 
 # ---------------------------------------------------------------------------
@@ -609,13 +680,19 @@ class TransportClient:
     One RPC at a time per connection; every method is a single
     request/reply frame pair.  ``poll`` returns None while the ticket is
     queued and the head pytree once served; refusals raise
-    :class:`TransportError` (``.code`` = dropped/capped/evicted) and
-    backpressure raises :class:`TransportBusy`.
+    :class:`TransportError` (``.code`` = dropped/capped/superseded/
+    evicted) and backpressure raises :class:`TransportBusy`.
+
+    Subset-aware: every request declares ``subset_ok``, and when the
+    server personalizes a subset the served head is a *subset pytree* —
+    ``last_subset`` holds the reply's leaf-path descriptor (None for
+    full-model servers); merge with ``repro.core.merge_subset``.
     """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
                  timeout: float = 30.0):
         self.timeout = timeout
+        self.last_subset = None
         self._sock = socket.create_connection((host, port),
                                               timeout=timeout)
         _no_nagle(self._sock)
@@ -640,20 +717,24 @@ class TransportClient:
         return _check_reply(rh), rb
 
     def submit(self, user, batch, mode: str = "C") -> int:
-        h, _ = self._rpc({"op": "SUBMIT", "user": user, "mode": mode},
-                         encode_pytree(batch))
+        h, _ = self._rpc({"op": "SUBMIT", "user": user, "mode": mode,
+                          "subset_ok": True}, encode_pytree(batch))
         return int(h["ticket"])
 
     def poll(self, ticket: int, wait_ms: Optional[float] = None):
-        header = {"op": "POLL", "ticket": int(ticket)}
+        header = {"op": "POLL", "ticket": int(ticket), "subset_ok": True}
         if wait_ms is not None:
             header["wait_ms"] = float(wait_ms)
         h, b = self._rpc(header,
                          extra_wait_s=(wait_ms or 0.0) / 1e3)
-        return decode_pytree(b) if h["status"] == "done" else None
+        if h["status"] != "done":
+            return None
+        self.last_subset = h.get("subset")
+        return decode_pytree(b)
 
     def head(self, user):
-        _, b = self._rpc({"op": "HEAD", "user": user})
+        h, b = self._rpc({"op": "HEAD", "user": user, "subset_ok": True})
+        self.last_subset = h.get("subset")
         return decode_pytree(b)
 
     def stats(self) -> Dict:
@@ -683,11 +764,13 @@ class TransportClient:
 
 class AsyncTransportClient:
     """Asyncio twin of :class:`TransportClient` — the load generator runs
-    N of these concurrently on one event loop."""
+    N of these concurrently on one event loop.  Subset-aware like the
+    blocking client (``subset_ok`` declared, ``last_subset`` recorded)."""
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0):
         self.host = host
         self.port = port
+        self.last_subset = None
         self._reader: Optional[asyncio.StreamReader] = None
         self._writer: Optional[asyncio.StreamWriter] = None
 
@@ -708,19 +791,24 @@ class AsyncTransportClient:
         return _check_reply(rh), rb
 
     async def submit(self, user, batch, mode: str = "C") -> int:
-        h, _ = await self._rpc({"op": "SUBMIT", "user": user,
-                                "mode": mode}, encode_pytree(batch))
+        h, _ = await self._rpc({"op": "SUBMIT", "user": user, "mode": mode,
+                                "subset_ok": True}, encode_pytree(batch))
         return int(h["ticket"])
 
     async def poll(self, ticket: int, wait_ms: Optional[float] = None):
-        header = {"op": "POLL", "ticket": int(ticket)}
+        header = {"op": "POLL", "ticket": int(ticket), "subset_ok": True}
         if wait_ms is not None:
             header["wait_ms"] = float(wait_ms)
         h, b = await self._rpc(header)
-        return decode_pytree(b) if h["status"] == "done" else None
+        if h["status"] != "done":
+            return None
+        self.last_subset = h.get("subset")
+        return decode_pytree(b)
 
     async def head(self, user):
-        _, b = await self._rpc({"op": "HEAD", "user": user})
+        h, b = await self._rpc({"op": "HEAD", "user": user,
+                                "subset_ok": True})
+        self.last_subset = h.get("subset")
         return decode_pytree(b)
 
     async def stats(self) -> Dict:

@@ -127,6 +127,91 @@ def test_checkpoint_roundtrip(seed, depth):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+# -- admission_weights invariants (serving-ring apply math) -----------------
+
+@st.composite
+def admissions(draw):
+    """Random (capacity, [(row, tau), ...]) with duplicates allowed."""
+    capacity = draw(st.integers(1, 16))
+    rows = draw(st.lists(
+        st.tuples(st.integers(0, capacity - 1), st.integers(0, 6)),
+        min_size=1, max_size=12))
+    return capacity, rows
+
+
+@SET
+@given(admissions(), st.floats(0.1, 2.0), st.floats(0.0, 2.0))
+def test_admission_weights_accumulate_per_admission(adm, beta, damping):
+    """w == Σ over admissions of β/count·(1+τ)^{-damping} onto each slot —
+    duplicates ACCUMULATE (the w[idx] = wt overwrite bug's invariant)."""
+    from repro.core import admission_weights
+    capacity, rows = adm
+    count = len(rows)
+    w = admission_weights(capacity, rows, beta=beta, count=count,
+                          damping=damping)
+    expect = np.zeros(capacity, np.float64)
+    for idx, tau in rows:
+        expect[idx] += beta / count * (1.0 + tau) ** (-damping)
+    np.testing.assert_allclose(w, expect.astype(np.float32), rtol=1e-5)
+
+
+@SET
+@given(admissions(), st.floats(0.1, 2.0), st.integers(0, 3))
+def test_admission_weights_tau_max_zeroes_stale_rows(adm, beta, tau_max):
+    """Rows past the bound contribute exactly zero; within the bound the
+    total weight never exceeds β (bounded-staleness admission)."""
+    from repro.core import admission_weights
+    capacity, rows = adm
+    count = len(rows)
+    w = admission_weights(capacity, rows, beta=beta, count=count,
+                          tau_max=tau_max)
+    only_stale = [i for i in range(capacity)
+                  if all(t > tau_max for r, t in rows if r == i)]
+    assert all(w[i] == 0.0 for i in only_stale)
+    # damping <= 1 per row and #admitted <= count => sum(w) <= beta
+    assert float(np.sum(w)) <= beta + 1e-5
+
+
+@SET
+@given(st.integers(0, 2 ** 16), st.integers(2, 4), st.floats(0.1, 1.5),
+       st.floats(0.0, 1.0))
+def test_ring_advance_composes_like_sequential_oracle(seed, windows, beta,
+                                                      damping):
+    """DeltaRing.advance over several windows == a numpy step-by-step
+    oracle applying the same admitted/capped/duplicate/stale row mix."""
+    from repro.core import init_server_state
+    from repro.fl.engine import DeltaBank
+    from repro.serving import DeltaRing
+
+    rng = np.random.RandomState(seed)
+    d = 3
+    params = {"w": jnp.asarray(rng.randn(d).astype(np.float32))}
+    ring = DeltaRing(params, windows=windows, user_cap=2)
+    state = init_server_state(params)
+    oracle = np.asarray(params["w"], np.float64)
+
+    for _ in range(3):
+        k = rng.randint(1, 4)
+        stack = rng.randn(k, d).astype(np.float32)
+        bank = DeltaBank(stacked={"w": jnp.asarray(stack)}, k=k)
+        ring.retain(bank)
+        # admissions: random rows, random staleness, one duplicate
+        reqs = [(rng.randint(0, k), int(rng.randint(0, windows + 1)))
+                for _ in range(rng.randint(1, 4))]
+        reqs.append(reqs[0])               # duplicate slot, same user
+        verdicts = [ring.admit_row(f"u{i % 2}", bank, r, t)
+                    for i, (r, t) in enumerate(reqs)]
+        admitted = [(r, t) for (r, t), v in zip(reqs, verdicts)
+                    if v == "admitted"]
+        state = ring.advance(state, beta=beta, damping=damping)
+        m = len(admitted)
+        for r, t in admitted:
+            oracle -= (beta / m * (1.0 + t) ** (-damping)
+                       * stack[r].astype(np.float64))
+    np.testing.assert_allclose(np.asarray(state.params["w"]), oracle,
+                               rtol=1e-4, atol=1e-5)
+
+
 @SET
 @given(st.integers(0, 2 ** 16), st.integers(1, 48))
 def test_flash_attention_property_random_shapes(seed, s_mult):

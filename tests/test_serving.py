@@ -244,9 +244,18 @@ def test_head_cache_lru_eviction():
     srv.flush()
     assert srv.stats["cached_heads"] == 3
     with pytest.raises(KeyError):
-        srv.head("u0")                    # evicted
+        srv.head("u0")                    # evicted from the LRU cache
+    # but the TICKET still owns its (bank, row) handle: eviction only
+    # affects user-keyed lookups, never an open ticket's own result
+    _close(srv.poll(tickets[0]),
+           personalize_me(loss, srv.ring.snapshot(0), user_batch(0),
+                          _pcfg().lam, _pcfg().inner_eta,
+                          _pcfg().inner_steps))
+    # a handle-less done ticket (pre-restart construction) falls back to
+    # the cache and surfaces the eviction explicitly
+    orphan = Ticket(user="u0", mode="C", stamp=0, status="done")
     with pytest.raises(RuntimeError, match="evicted"):
-        srv.poll(tickets[0])              # served but evicted: re-submit
+        srv.poll(orphan)
     jax.block_until_ready(jax.tree.leaves(srv.head("u4"))[0])
 
 
@@ -404,6 +413,113 @@ def test_restart_with_empty_head_cache(tmp_path):
     assert srv2.stats["cached_heads"] == 0
     assert srv2.window == 1
     _close(srv2.params, srv.params)
+
+
+# -- admission-weight duplicate accumulation (bugfix regression) -----------
+
+def test_admission_weights_duplicate_rows_accumulate():
+    """Regression: a row admitted twice in one window (user_cap >= 2,
+    transport re-submits landing in the same bank slot) used to be
+    OVERWRITTEN (`w[idx] = wt`), silently under-applying the duplicate
+    while the version counter still advanced per admission."""
+    from repro.core import admission_weights
+    w = admission_weights(4, [(0, 0), (0, 0)], beta=1.0, count=2)
+    np.testing.assert_allclose(w, [1.0, 0.0, 0.0, 0.0])   # pre-fix: 0.5
+    # damping composes per admission, not per slot
+    w = admission_weights(4, [(1, 0), (1, 2)], beta=1.0, count=2,
+                          damping=1.0)
+    np.testing.assert_allclose(w[1], 0.5 + 0.5 / 3.0, rtol=1e-6)
+
+
+def test_duplicate_admission_applies_both_rows():
+    """End-to-end through the ring: the SAME (bank, row) admitted twice
+    into one window contributes 2·β/count to the apply — pre-fix the
+    second admission overwrote the first's weight."""
+    from repro.core import init_server_state
+    from repro.serving import DeltaRing
+    pcfg = _pcfg()
+    params0 = _params()
+    srv = PersonalizationServer(params0, loss, pcfg)
+    srv.submit("u", user_batch(1))
+    srv.flush()
+    bank = srv.ring._banks[0][0]
+    ring = DeltaRing(params0, windows=2, user_cap=2)
+    assert ring.admit("u", bank, 0, 0)
+    assert ring.admit("u", bank, 0, 0)    # transport re-submit, same slot
+    state = ring.advance(init_server_state(params0), beta=pcfg.beta)
+    delta = jax.tree.map(lambda x: np.asarray(x[0]), bank.stacked)
+    expect = jax.tree.map(lambda w, d: np.asarray(w) - pcfg.beta * d,
+                          params0, delta)   # 2 · β/2 · d; pre-fix: β/2 · d
+    _close(state.params, expect, rtol=1e-5, atol=1e-6)
+
+
+# -- per-ticket result handles (stale-ticket aliasing bugfix) ---------------
+
+def test_stale_ticket_keeps_its_own_head():
+    """Regression: poll resolved "done" tickets BY USER, so polling an
+    older ticket after a newer flush for the same user silently returned
+    the newest head.  Each ticket owns its (bank, row) handle."""
+    pcfg = _pcfg()
+    params = _params()
+    srv = PersonalizationServer(params, loss, pcfg)
+    t1 = srv.submit("u", user_batch(1))
+    srv.flush()
+    t2 = srv.submit("u", user_batch(2))
+    srv.flush()
+    ref1 = personalize_me(loss, params, user_batch(1), pcfg.lam,
+                          pcfg.inner_eta, pcfg.inner_steps)
+    ref2 = personalize_me(loss, params, user_batch(2), pcfg.lam,
+                          pcfg.inner_eta, pcfg.inner_steps)
+    _close(srv.poll(t1), ref1)            # pre-fix: aliased to ref2
+    _close(srv.poll(t2), ref2)
+    _close(srv.head("u"), ref2)           # user-keyed lookup IS the newest
+
+
+def test_superseded_ticket_fails_explicitly_after_retirement():
+    """Once a served ticket's ring window rotates out, its head bank is
+    gone — poll must raise a typed superseded-and-retired error, never
+    return another flush's head."""
+    srv = PersonalizationServer(_params(), loss, _pcfg(), windows=2)
+    t_old = srv.submit("u", user_batch(1))
+    srv.flush()
+    assert t_old.status == "done" and t_old.window == 0
+    for _ in range(2):                    # horizon moves past window 0
+        srv.submit("u", user_batch(2))
+        srv.advance_window()
+    with pytest.raises(RuntimeError, match="superseded and retired"):
+        srv.poll(t_old)
+    assert t_old.head is None             # the bank pin is dropped too
+
+
+# -- tau_max requested-vs-effective round trip (bugfix regression) ----------
+
+def test_tau_max_clamp_warns_and_preserves_requested():
+    from repro.serving import DeltaRing
+    with pytest.warns(UserWarning, match="clamped"):
+        ring = DeltaRing(_params(), windows=2, tau_max=5)
+    assert ring.tau_max == 1              # effective: ring depth bound
+    assert ring.tau_max_requested == 5    # requested: preserved
+
+
+def test_tau_max_roundtrips_requested_not_clamped(tmp_path):
+    """Regression: the checkpoint used to persist the CLAMPED tau_max, so
+    restoring a shallow-ring checkpoint into a deeper ring silently kept
+    the accidentally-tightened bound."""
+    path = str(tmp_path / "tau_state")
+    with pytest.warns(UserWarning, match="clamped"):
+        srv = PersonalizationServer(_params(), loss, _pcfg(), windows=2,
+                                    tau_max=5)
+    assert srv.ring.tau_max == 1
+    srv.save(path)
+    # restore into a deeper ring: the REQUESTED bound re-clamps against
+    # the new depth (min(5, 8-1) = 5), not the old ring's accident
+    srv2 = PersonalizationServer.restore(path, loss, _pcfg(), windows=8)
+    assert srv2.ring.tau_max_requested == 5
+    assert srv2.ring.tau_max == 5         # pre-fix: stayed 1
+    # same-depth restore still warns and re-clamps identically
+    with pytest.warns(UserWarning, match="clamped"):
+        srv3 = PersonalizationServer.restore(path, loss, _pcfg())
+    assert srv3.ring.tau_max == 1 and srv3.ring.tau_max_requested == 5
 
 
 def test_window_apply_advances_global_model():
