@@ -22,10 +22,19 @@
                         ring_bytes_per_user ≥ 20x smaller (gated), backbone
                         bit-parity across windows, users/GiB residency row,
                         and a fig2-config convergence pin (|Δacc| ≤ 0.1)
+  quant               — int8 delta banking + compressed wire: apply_rows_q
+                        kernel parity vs the jnp oracle (gated), ring
+                        residency ≥ 3.5x smaller than fp32 banking (gated),
+                        SUBMIT/HEAD wire bodies ≥ 3.5x smaller (gated),
+                        fig2-config convergence pin fp32 vs int8+EF
+                        (|Δacc| ≤ 0.1, gated), host_materializations == 0
   kernels             — Pallas kernels (interpret) vs jnp oracle, µs/call
 
-Prints ``name,us_per_call,derived`` CSV lines (plus per-figure CSV blocks).
-Env: BENCH_FAST=1 shrinks rounds for smoke runs.
+Prints ``name,us_per_call,derived`` CSV lines (plus per-figure CSV blocks)
+AND appends one machine-readable JSON line per bench run to
+``experiments/bench/BENCH_<name>.json`` (JSONL: wall_s, gate results,
+measured bytes — CI and sweep scripts parse these instead of scraping
+stdout).  Env: BENCH_FAST=1 shrinks rounds for smoke runs.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig2a,kernels]
 """
@@ -52,6 +61,18 @@ def _save(name, obj):
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
         json.dump(obj, f, indent=2)
+
+
+def _bench_log(name, row):
+    """Append one machine-readable JSON line for this bench run.
+
+    ``<name>.json`` (:func:`_save`) holds the latest run's full result;
+    ``BENCH_<name>.json`` accumulates one JSONL row per run so CI gate
+    checks and regression sweeps parse records instead of scraping the
+    stdout CSV."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"BENCH_{name}.json"), "a") as f:
+        f.write(json.dumps(row, sort_keys=True) + "\n")
 
 
 def fig2a_concurrency():
@@ -612,6 +633,163 @@ def partial():
     return ratio
 
 
+def quant():
+    """Quantized delta banking + compressed wire, four gates + a pin.
+
+      * kernel parity — ``apply_rows_q`` (interpret) must match the jnp
+        oracle within 1e-5 over pow2 and non-pow2 cohorts (gated);
+      * residency — an int8-banking server at the serve-transport config
+        (d=256 features, 256 classes, 32 users) banks int8 delta rows +
+        int8 EF residual rows and stores NO fp32 head bank (heads are lazy
+        ``snapshot − scale·q`` views), so ``ring_bytes_per_user`` must be
+        ≥ 3.5x smaller than the fp32 twin's (gated) — i.e. ≥ 3.5x ring
+        capacity at equal device memory;
+      * wire — SUBMIT (32×256 batch) and HEAD (256×256 head) npz bodies
+        under ``codec="int8"`` must each be ≥ 3.5x smaller than fp32
+        (gated; measured on full bodies, npz container overhead included);
+      * convergence pin — fig2 MNIST config driven THROUGH two
+        PersonalizationServers (fp32 banking vs int8+EF banking) for the
+        same windows; personalized accuracy must land within 0.1 (gated):
+        error feedback keeps banking noise a residual, not a bias;
+      * steady state — the int8 server's ``host_materializations`` stays 0
+        (gated): quantized rows never materialize fp32 on the host.
+    """
+    from repro.core import PersAFLConfig
+    from repro.core.quant import quantize_stack
+    from repro.kernels.fused_update.kernel import apply_rows_q
+    from repro.kernels.fused_update.ref import apply_rows_q_ref
+    from repro.serving import PersonalizationServer
+    from repro.serving.transport import encode_pytree
+
+    t_bench0 = time.time()
+    rng = np.random.RandomState(0)
+
+    # -- gate 1: kernel parity vs the jnp oracle ---------------------------
+    max_diff = 0.0
+    for m, shape in ((3, (512,)), (8, (4096,)), (5, (257,))):
+        w = jnp.asarray(rng.randn(*shape).astype(np.float32))
+        stack = jnp.asarray(
+            0.01 * rng.randn(m, *shape).astype(np.float32))
+        qs = quantize_stack(stack)
+        q, sc = jax.tree.leaves(qs.q)[0], jax.tree.leaves(qs.scales)[0]
+        weights = jnp.asarray(rng.rand(m).astype(np.float32))
+        got = apply_rows_q(w, q, sc, weights, interpret=True)
+        want = apply_rows_q_ref(w, q, sc, weights)
+        max_diff = max(max_diff, float(jnp.max(jnp.abs(got - want))))
+    kernel_parity = max_diff <= 1e-5
+    print(f"quant,kernel_parity,max_abs_diff={max_diff:.2e},"
+          f"ok={kernel_parity}", flush=True)
+
+    # -- gate 2: ring residency, int8 vs fp32 twin -------------------------
+    d, classes, users, windows = 256, 256, 32, 3
+
+    def loss(p, b):
+        logits = b["images"] @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.sum(
+            jax.nn.one_hot(b["labels"], classes) * logp, -1))
+
+    params = {"w": jnp.zeros((d, classes)), "b": jnp.zeros((classes,))}
+    pcfg = PersAFLConfig(option="C", lam=20.0, inner_steps=5,
+                         inner_eta=0.05, beta=0.5)
+    batches = [{"images": rng.randn(32, d).astype(np.float32),
+                "labels": rng.randint(0, classes, 32).astype(np.int32)}
+               for _ in range(users)]
+    uids = [f"user{u}" for u in range(users)]
+
+    bytes_per_user, host_mat = {}, {}
+    for dtype in ("fp32", "int8"):
+        srv = PersonalizationServer(params, loss, pcfg, modes=("C",),
+                                    max_pending=2 * users,
+                                    delta_dtype=dtype)
+        for _ in range(windows):
+            for uid, b in zip(uids, batches):
+                srv.submit(uid, b, mode="C")
+            srv.flush()
+            jax.block_until_ready(srv.stacked_heads(uids))
+            srv.advance_window()
+        st = srv.stats
+        bytes_per_user[dtype] = int(st["ring_bytes_per_user"])
+        host_mat[dtype] = int(st["host_materializations"])
+        print(f"quant,{dtype},ring_row_bytes={st['ring_row_bytes']},"
+              f"ring_bytes_per_user={bytes_per_user[dtype]},"
+              f"users_per_gib={2 ** 30 // bytes_per_user[dtype]},"
+              f"host_materializations={host_mat[dtype]}", flush=True)
+    ring_ratio = bytes_per_user["fp32"] / bytes_per_user["int8"]
+
+    # -- gate 3: wire bytes, SUBMIT and HEAD bodies ------------------------
+    submit_bytes = {c: len(encode_pytree(batches[0], codec=c))
+                    for c in ("fp32", "int8")}
+    head = {"w": rng.randn(d, classes).astype(np.float32),
+            "b": rng.randn(classes).astype(np.float32)}
+    head_bytes = {c: len(encode_pytree(head, codec=c))
+                  for c in ("fp32", "int8")}
+    submit_ratio = submit_bytes["fp32"] / submit_bytes["int8"]
+    head_ratio = head_bytes["fp32"] / head_bytes["int8"]
+    print(f"quant,wire,submit_fp32={submit_bytes['fp32']},"
+          f"submit_int8={submit_bytes['int8']},"
+          f"submit_ratio={submit_ratio:.2f},"
+          f"head_fp32={head_bytes['fp32']},"
+          f"head_int8={head_bytes['int8']},"
+          f"head_ratio={head_ratio:.2f}", flush=True)
+
+    # -- gate 4: convergence pin on the fig2 MNIST config ------------------
+    from repro.fl import make_personalized_eval
+    clients, cparams, closs, cacc, _ = setup("mnist", n_clients=16)
+    pcfg2 = PersAFLConfig(option="C", lam=25.0, inner_steps=5,
+                          inner_eta=0.02, beta=1.0)
+    cbatches = [{"images": c.train_x[:16], "labels": c.train_y[:16]}
+                for c in clients]
+    cuids = [f"client{u}" for u in range(len(clients))]
+    ev = make_personalized_eval(closs, cacc, clients,
+                                ft_steps=1, ft_lr=0.01)
+    accs = {}
+    for dtype in ("fp32", "int8"):
+        srv = PersonalizationServer(cparams, closs, pcfg2, modes=("C",),
+                                    max_pending=2 * len(clients),
+                                    delta_dtype=dtype)
+        for _ in range(6 if FAST else 12):
+            for uid, b in zip(cuids, cbatches):
+                srv.submit(uid, b, mode="C")
+            srv.flush()
+            srv.advance_window()
+        accs[dtype] = float(ev(srv.params))
+    gap = abs(accs["fp32"] - accs["int8"])
+    print(f"quant,convergence,acc_fp32={accs['fp32']:.3f},"
+          f"acc_int8_ef={accs['int8']:.3f},gap={gap:.3f}", flush=True)
+    print(f"quant,0,ring_ratio={ring_ratio:.2f}")
+
+    wall_s = time.time() - t_bench0
+    gates = {"kernel_parity": kernel_parity,
+             "ring_ratio_ge_3p5": ring_ratio >= 3.5,
+             "submit_ratio_ge_3p5": submit_ratio >= 3.5,
+             "head_ratio_ge_3p5": head_ratio >= 3.5,
+             "acc_gap_le_0p1": gap <= 0.1,
+             "host_materializations_zero": host_mat["int8"] == 0}
+    result = {
+        "kernel_max_abs_diff": max_diff,
+        "ring_bytes_per_user_fp32": bytes_per_user["fp32"],
+        "ring_bytes_per_user_int8": bytes_per_user["int8"],
+        "ring_ratio": ring_ratio,
+        "submit_bytes_fp32": submit_bytes["fp32"],
+        "submit_bytes_int8": submit_bytes["int8"],
+        "submit_ratio": submit_ratio,
+        "head_bytes_fp32": head_bytes["fp32"],
+        "head_bytes_int8": head_bytes["int8"],
+        "head_ratio": head_ratio,
+        "acc_fp32": accs["fp32"], "acc_int8_ef": accs["int8"],
+        "acc_gap": gap,
+        "host_materializations": host_mat["int8"],
+        "wall_s": wall_s, "gates": gates,
+    }
+    _save("quant", result)
+    _bench_log("quant", result)
+    for gate, ok in gates.items():
+        if not ok:
+            raise RuntimeError(f"quant gate failed: {gate} ({result})")
+    return ring_ratio
+
+
 def kernels():
     """µs/call for each Pallas kernel (interpret) and its jnp oracle."""
     from repro.kernels.flash_attention.kernel import flash_attention_fwd
@@ -651,6 +829,18 @@ def kernels():
     t_ref = timeit(lambda: FR.sgd_step_ref(w, g, 0.01))
     print(f"kernel_fused_update,{t_kern:.0f},ref_us={t_ref:.0f}")
 
+    from repro.core.quant import quantize_stack
+    stack = 0.01 * jax.random.normal(ks[2], (8, 1 << 18))
+    qs = quantize_stack(stack)
+    q = jax.tree.leaves(qs.q)[0]
+    sc = jax.tree.leaves(qs.scales)[0]
+    wq = jax.random.normal(ks[3], (1 << 18,))
+    wts = jnp.full((8,), 0.1, jnp.float32)
+    t_kern = timeit(lambda: FK.apply_rows_q(wq, q, sc, wts,
+                                            interpret=True))
+    t_ref = timeit(lambda: FR.apply_rows_q_ref(wq, q, sc, wts))
+    print(f"kernel_apply_rows_q,{t_kern:.0f},ref_us={t_ref:.0f}")
+
 
 BENCHES = {
     "fig2a": fig2a_concurrency,
@@ -662,6 +852,7 @@ BENCHES = {
     "serve": serve,
     "serve_transport": serve_transport,
     "partial": partial,
+    "quant": quant,
     "kernels": kernels,
 }
 
@@ -676,7 +867,9 @@ def main() -> None:
     for name in names:
         t0 = time.time()
         BENCHES[name]()
-        print(f"bench_{name}_total,{(time.time()-t0)*1e6:.0f},ok", flush=True)
+        wall_s = time.time() - t0
+        print(f"bench_{name}_total,{wall_s*1e6:.0f},ok", flush=True)
+        _bench_log(name, {"bench": name, "wall_s": wall_s, "ok": True})
 
 
 if __name__ == "__main__":

@@ -71,10 +71,52 @@ def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
 flatten_pytree = _flatten
 unflatten_pytree = _unflatten
 
+# ``np.savez``/``np.load`` silently degrade non-native dtypes: ml_dtypes
+# leaves (bfloat16, float8_*) have numpy kind 'V' and come back as raw void
+# records — dtype ``|V2`` instead of bfloat16.  Such leaves are stored as
+# same-width unsigned-int bit patterns plus a ``__dt__:<key>`` marker
+# naming the true dtype, and re-viewed on load — bit-exact both ways.
+# Native dtypes (f32/f16/int8/uint8/...) round-trip untouched.  The marker
+# prefix contains ``:``, which no ``path/to/leaf`` key produced by
+# ``_flatten`` starts with, so markers can never collide with data keys.
+DTYPE_KEY_PREFIX = "__dt__:"
+
+
+def _true_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def pack_dtypes(flat: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Rewrite non-npz-native leaves as uint bit patterns + dtype markers."""
+    out: Dict[str, np.ndarray] = {}
+    for key, val in flat.items():
+        arr = np.asarray(val)
+        if arr.dtype.kind == "V":
+            out[key] = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+            out[DTYPE_KEY_PREFIX + key] = np.asarray(arr.dtype.name)
+        else:
+            out[key] = arr
+    return out
+
+
+def unpack_dtypes(flat: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Inverse of :func:`pack_dtypes`: re-view marked leaves, drop markers."""
+    markers = {k[len(DTYPE_KEY_PREFIX):]: str(flat[k]) for k in flat
+               if k.startswith(DTYPE_KEY_PREFIX)}
+    out = {k: v for k, v in flat.items()
+           if not k.startswith(DTYPE_KEY_PREFIX)}
+    for key, name in markers.items():
+        out[key] = out[key].view(_true_dtype(name))
+    return out
+
 
 def save_pytree(path: str, tree, meta: Dict | None = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    flat = _flatten(jax.tree.map(np.asarray, tree))
+    flat = pack_dtypes(_flatten(jax.tree.map(np.asarray, tree)))
     np.savez(path, **flat)
     if meta is not None:
         with open(path + ".meta.json", "w") as f:
@@ -86,7 +128,7 @@ def load_pytree(path: str):
         path = path + ".npz"
     with np.load(path) as z:
         flat = {k: z[k] for k in z.files}
-    return _unflatten(flat)
+    return _unflatten(unpack_dtypes(flat))
 
 
 def load_meta(path: str) -> Dict | None:

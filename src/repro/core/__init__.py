@@ -10,3 +10,8 @@ from repro.core.moreau import me_grad, personalize_me, solve_prox  # noqa: F401
 from repro.core.subset import (SubsetSpec, leaf_paths,           # noqa: F401
                                merge_subset, subset_like,
                                row_nbytes, tree_nbytes)
+from repro.core.quant import (QuantStack, QuantTree,             # noqa: F401
+                              QuantizedBank, QuantizedHeads,
+                              quantize_stack, dequantize_stack,
+                              quantize_tree, dequantize_tree,
+                              ef_quantize_stack, fp32_row_nbytes)

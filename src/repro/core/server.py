@@ -29,8 +29,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import PersAFLConfig, ServerState
+from repro.core.quant import QuantStack
 from repro.core.subset import merge_subset, subset_like
 from repro.kernels.fused_update.ops import (apply_delta_tree,
+                                            apply_rows_q_tree,
                                             apply_rows_tree, donate_argnums,
                                             spans_devices)
 
@@ -148,6 +150,42 @@ def _apply_rows_state_jit(donate: bool):
     return apply
 
 
+@functools.lru_cache(maxsize=None)
+def _apply_rows_q_state_jit(donate: bool):
+    # quantized twin of _apply_rows_state_jit: the stack arrives as a
+    # QuantStack (int8 rows + per-row-per-leaf f32 scales) and the apply
+    # routes through the fused dequant×weight×accumulate kernel — an fp32
+    # copy of the bank never exists, not even transiently inside the jit
+    @functools.partial(jax.jit, static_argnames=("mode",),
+                       donate_argnums=donate_argnums(0) if donate else ())
+    def apply(state, q_stack, weights, count, staleness_max,
+              staleness_sum, mode: str = "auto"):
+        params = state.params
+        if (jax.tree_util.tree_structure(q_stack.q)
+                == jax.tree_util.tree_structure(params)):
+            new_params = apply_rows_q_tree(params, q_stack.q,
+                                           q_stack.scales, weights,
+                                           mode=mode)
+        else:
+            # personal_subset stack: apply the subset leaves only, pass
+            # the backbone through untouched (same trace-time branch as
+            # the fp32 overload)
+            new_sub = apply_rows_q_tree(subset_like(params, q_stack.q),
+                                        q_stack.q, q_stack.scales,
+                                        weights, mode=mode)
+            new_params = merge_subset(params, new_sub)
+        return ServerState(
+            params=new_params,
+            t=state.t + jnp.asarray(count, jnp.int32),
+            staleness_sum=state.staleness_sum
+            + jnp.asarray(staleness_sum, jnp.float32),
+            staleness_max=jnp.maximum(state.staleness_max,
+                                      jnp.asarray(staleness_max,
+                                                  jnp.int32)),
+        )
+    return apply
+
+
 def admission_weights(capacity: int, rows: List[Tuple[int, int]], *,
                       beta: float, count: int, damping: float = 0.0,
                       tau_max: Optional[int] = None) -> np.ndarray:
@@ -215,8 +253,17 @@ def apply_admitted_rows(state: ServerState, delta_stack, weights, count,
     ``delta_stack`` may also be a *personal-subset* stack (the pruned
     structure of ``repro.core.subset``): only the subset leaves are
     rewritten and the shared backbone passes through bit-identically.
+
+    With int8 delta banking the stack arrives as a
+    :class:`repro.core.quant.QuantStack` and the apply dispatches to the
+    fused dequant×weight×accumulate kernel (``apply_rows_q``) — straggler
+    re-admission never materializes fp32 rows.
     """
     mode = "ref" if spans_devices(delta_stack) else "auto"
+    if isinstance(delta_stack, QuantStack):
+        return _apply_rows_q_state_jit(False)(
+            state, delta_stack, jnp.asarray(weights, jnp.float32),
+            count, staleness_max, staleness_sum, mode=mode)
     return _apply_rows_state_jit(False)(state, delta_stack,
                                         jnp.asarray(weights, jnp.float32),
                                         count, staleness_max, staleness_sum,

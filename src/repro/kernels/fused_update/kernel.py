@@ -1,10 +1,28 @@
-"""Pallas TPU kernel: fused PersA-FL local-update elementwise chains.
+"""Pallas TPU kernels: fused PersA-FL local updates and bank applies.
 
 The paper's client loop applies η/λ-scaled parameter updates every local
 step; at multi-billion-parameter scale each unfused update costs 3–4 HBM
 round-trips (read w, read g, write w, plus the λ(θ−w) temporary for
-Option C).  This kernel fuses each update into one read-modify-write pass,
+Option C).  This module fuses each chain into one read-modify-write pass,
 tiled as flat (block,) VMEM rows.  Math in f32, storage dtype preserved.
+
+Two stacked-bank apply kernels close every aggregation window:
+
+  * ``apply_rows``   — fp32 banking: ``w ← w − Σ_i weights[i]·Δ_i`` over a
+    ``[M, n]`` delta stack, the weight vector folding β/M, per-row FedAsync
+    staleness damping ``(1+τ)^{-a}`` and bucket-padding masks.
+  * ``apply_rows_q`` — **int8 banking**: the stack arrives quantized
+    (symmetric absmax, ``repro.core.quant``) as int8 rows + per-row f32
+    scales, and the kernel folds dequantization × admission weight ×
+    accumulate into the SAME one-pass read-modify-write: the coefficient
+    ``weights[i]·scales[i]`` multiplies ``int8→f32`` rows in VMEM, so a
+    straggler re-admission never materializes an fp32 delta row anywhere.
+    Scales ride alongside the traced weight vector as a second ``[rows,1]``
+    operand block — identical padding-mask and pow2-row-bucket discipline,
+    so one compile per bucket serves every window composition.
+
+Both have jnp oracles in ``ref.py`` (bit-comparable in interpret mode) and
+pytree-aware jitted fronts in ``ops.py``.
 """
 from __future__ import annotations
 
@@ -144,6 +162,67 @@ def apply_rows(w, d_stack, weights, *, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((total,), w.dtype),
         interpret=interpret,
     )(flat_w, flat_d, s)
+    return out[:n].reshape(w.shape)
+
+
+def _apply_rows_q_kernel(w_ref, q_ref, s_ref, sc_ref, o_ref):
+    # fused dequant × admission-weight × accumulate: the per-row coefficient
+    # weights[i]·scales[i] (both [rows, 1] f32, traced) multiplies the
+    # int8→f32 rows in VMEM, so the fp32 delta row never exists in memory —
+    # only the partial sums do
+    r = pl.program_id(1)
+    coeff = s_ref[...] * sc_ref[...]
+    part = jnp.sum(coeff * q_ref[...].astype(jnp.float32), axis=0)
+
+    @pl.when(r == 0)
+    def _init():
+        o_ref[...] = (w_ref[...].astype(jnp.float32) - part).astype(o_ref.dtype)
+
+    @pl.when(r > 0)
+    def _accum():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) - part).astype(o_ref.dtype)
+
+
+def apply_rows_q(w, q_stack, scales, weights, *, interpret: bool = True):
+    """Quantized stacked apply ``w ← w − Σ_i weights[i]·scales[i]·q_i``.
+
+    ``q_stack``: ``[M, *w.shape]`` int8 rows (symmetric absmax quantized);
+    ``scales``: ``[M]`` f32 per-row dequantization scales; ``weights``: the
+    same traced ``[M]`` f32 admission-weight vector as :func:`apply_rows`.
+    Same grid, padding and pow2-row-bucket discipline — zero-weight
+    zero-scale padding rows contribute nothing — with the dequant folded
+    into the reduction coefficient, so the bank's int8 rows are read once
+    and no fp32 copy of the stack is ever materialized.
+    """
+    m = q_stack.shape[0]
+    flat_w = w.reshape(-1)
+    flat_q = q_stack.reshape(m, -1)
+    n = flat_w.shape[0]
+    pad = (-n) % COL_BLOCK
+    if pad:
+        flat_w = jnp.pad(flat_w, (0, pad))
+        flat_q = jnp.pad(flat_q, ((0, 0), (0, pad)))
+    row_blk = min(1 << max(m - 1, 0).bit_length(), ROW_BLOCK)
+    rpad = (-m) % row_blk
+    s = jnp.asarray(weights, jnp.float32).reshape(m, 1)
+    sc = jnp.asarray(scales, jnp.float32).reshape(m, 1)
+    if rpad:  # zero-weight, zero-scale padding rows: contribute nothing
+        flat_q = jnp.pad(flat_q, ((0, rpad), (0, 0)))
+        s = jnp.pad(s, ((0, rpad), (0, 0)))
+        sc = jnp.pad(sc, ((0, rpad), (0, 0)))
+    total = n + pad
+    grid = (total // COL_BLOCK, (m + rpad) // row_blk)
+    out = pl.pallas_call(
+        _apply_rows_q_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((COL_BLOCK,), lambda c, r: (c,)),
+                  pl.BlockSpec((row_blk, COL_BLOCK), lambda c, r: (r, c)),
+                  pl.BlockSpec((row_blk, 1), lambda c, r: (r, 0)),
+                  pl.BlockSpec((row_blk, 1), lambda c, r: (r, 0))],
+        out_specs=pl.BlockSpec((COL_BLOCK,), lambda c, r: (c,)),
+        out_shape=jax.ShapeDtypeStruct((total,), w.dtype),
+        interpret=interpret,
+    )(flat_w, flat_q, s, sc)
     return out[:n].reshape(w.shape)
 
 

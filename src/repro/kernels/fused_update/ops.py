@@ -94,6 +94,34 @@ def spans_devices(tree) -> bool:
     return False
 
 
+@functools.lru_cache(maxsize=None)
+def _apply_rows_q_jit():
+    @functools.partial(jax.jit, static_argnames=("mode",),
+                       donate_argnums=donate_argnums(0))
+    def apply(w_tree, q_tree, scales_tree, weights, mode: str = "auto"):
+        fn = _dispatch(K.apply_rows_q, R.apply_rows_q_ref, mode)
+        s = jnp.asarray(weights, jnp.float32)
+        return jax.tree.map(lambda w, q, sc: fn(w, q, sc, s),
+                            w_tree, q_tree, scales_tree)
+    return apply
+
+
+def apply_rows_q_tree(w_tree, q_tree, scales_tree, weights,
+                      mode: str = "auto"):
+    """Quantized twin of :func:`apply_rows_tree`: the stack arrives as an
+    int8 ``q_tree`` (leaves ``[M, ...]``) + f32 ``scales_tree`` (leaves
+    ``[M]``, per row per leaf — the :class:`repro.core.quant.QuantStack`
+    components) and each leaf's apply folds dequant × admission weight ×
+    accumulate into one fused pass — no fp32 copy of the bank is ever
+    materialized.  Sharded stacks force the oracle path for the same
+    reason as :func:`apply_rows_tree` (per-shard partials + one psum).
+    """
+    if mode == "auto" and spans_devices(q_tree):
+        mode = "ref"
+    return _apply_rows_q_jit()(w_tree, q_tree, scales_tree, weights,
+                               mode=mode)
+
+
 def apply_rows_tree(w_tree, stack_tree, weights, mode: str = "auto"):
     """Stacked server apply w ← w − Σ_i weights[i]·Δ_i per leaf, fused.
 

@@ -5,6 +5,9 @@ Option C inner:  θ ← θ − η_in (g + λ(θ − w))
 Option C outer:  w ← w − η λ (w − θ)
 Server apply:    w ← w − s Δ   (s a *traced* scalar: β, β/M, or the
                  staleness-damped β/(1+τ)^a — no recompile per staleness)
+Stacked apply:   w ← w − Σ_i s_i Δ_i          (fp32 bank rows)
+Quantized apply: w ← w − Σ_i s_i·scale_i·q_i  (int8 bank rows + per-row
+                 f32 scales: dequant folded into the reduction coefficient)
 
 All of these are memory-bound elementwise chains over multi-GB parameter
 tensors on the assigned architectures; the kernel fuses each into a single
@@ -46,4 +49,21 @@ def apply_rows_ref(w, d_stack, weights):
     """
     s = jnp.asarray(weights, jnp.float32).reshape((-1,) + (1,) * w.ndim)
     acc = jnp.sum(s * d_stack.astype(jnp.float32), axis=0)
+    return (w.astype(jnp.float32) - acc).astype(w.dtype)
+
+
+def apply_rows_q_ref(w, q_stack, scales, weights):
+    """Quantized stacked apply w ← w − Σ_i s_i·scale_i·q_i, one reduction.
+
+    ``q_stack`` is the int8 ``[M, *w.shape]`` bank buffer and ``scales``
+    its ``[M]`` f32 per-row dequant scales (``repro.core.quant``);
+    ``weights`` the same traced admission-weight vector as
+    :func:`apply_rows_ref`.  The dequant is folded into the per-row
+    coefficient, so the oracle matches the kernel's arithmetic exactly
+    (never dequantize-then-apply as two passes).
+    """
+    coeff = (jnp.asarray(weights, jnp.float32)
+             * jnp.asarray(scales, jnp.float32)
+             ).reshape((-1,) + (1,) * w.ndim)
+    acc = jnp.sum(coeff * q_stack.astype(jnp.float32), axis=0)
     return (w.astype(jnp.float32) - acc).astype(w.dtype)

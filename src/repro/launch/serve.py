@@ -210,6 +210,12 @@ def main():
                          "spelling, e.g. 'head' or 'blocks/#11') — only "
                          "these leaves are personalized per user; the "
                          "backbone stays shared and is never banked")
+    ap.add_argument("--delta-dtype", choices=("fp32", "int8"),
+                    default="fp32",
+                    help="delta banking codec: int8 quantizes banked "
+                         "delta/residual rows (error feedback keeps "
+                         "convergence) and compresses the transport wire "
+                         "for codec_ok clients")
     ap.add_argument("--lam", type=float, default=30.0)
     ap.add_argument("--alpha", type=float, default=0.01)
     ap.add_argument("--inner-steps", type=int, default=5)
@@ -263,7 +269,8 @@ def main():
         server = PersonalizationServer(params, loss, pcfg,
                                        modes=(args.mode,),
                                        max_pending=max(B, 1),
-                                       personal_subset=subset_spec)
+                                       personal_subset=subset_spec,
+                                       delta_dtype=args.delta_dtype)
         if args.listen is not None:
             _serve_transport(args, server)
             return
@@ -299,9 +306,12 @@ def main():
               "personalized": args.personalize, "mode": args.mode,
               "users": B,
               "personal_subset": (subset_spec.descriptor()
-                                  if subset_spec is not None else None)}
+                                  if subset_spec is not None else None),
+              "delta_dtype": args.delta_dtype}
     if server_stats is not None:
         record["ring_bytes_per_user"] = server_stats["ring_bytes_per_user"]
+        record["ring_bytes_saved_per_user"] = \
+            server_stats["ring_bytes_saved_per_user"]
     if server_stats is not None:
         record["host_materializations"] = \
             server_stats["host_materializations"]

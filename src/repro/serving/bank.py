@@ -40,6 +40,25 @@ per-user ring residency shrinks from full-model to subset bytes
 (``row_nbytes``; the ``ring_bytes_per_user`` stat and bench gate).  This
 is exact, not approximate: subset applies never touch backbone leaves, so
 one backbone serves every retained window bit-for-bit.
+
+Quantized delta banking (``delta_dtype="int8"``): the orthogonal residency
+axis.  Retained banks arrive as :class:`repro.core.quant.QuantizedBank`
+handles — int8 rows + per-row-per-leaf f32 scales (symmetric absmax,
+chosen at admission by the server's flush, with per-user error feedback) —
+so a banked row costs ~N bytes instead of 4N, and the window apply
+dispatches through the fused dequant×weight×accumulate kernel
+(``apply_rows_q`` via ``apply_admitted_rows``) without ever materializing
+an fp32 row.  The ring additionally demotes the *personal leaves of
+retired windows' snapshots* to int8 (:class:`repro.core.quant.QuantTree`,
+per-leaf scale): the current window's snapshot stays exact fp32 — fresh
+heads are never quantization-noisy — while straggler recomputes against
+older windows transparently dequantize through :meth:`snapshot` /
+:meth:`subset_snapshot`.  ``row_nbytes`` counts the quantized bytes and
+``row_nbytes_fp32`` the fp32 baseline, which is what the ``quant`` bench's
+≥ 3.5x ``ring_bytes_per_user`` gate measures.  The ring itself is
+codec-agnostic at admission: it pins whatever bank handle the flush
+retained and groups admitted rows per bank — fp32 and int8 windows can
+even coexist during a migration.
 """
 from __future__ import annotations
 
@@ -47,6 +66,8 @@ import warnings
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import admission_weights, apply_admitted_rows
+from repro.core.quant import (QuantStack, QuantTree, dequantize_tree,
+                              fp32_row_nbytes, quantize_tree)
 from repro.core.subset import SubsetSpec, merge_subset
 from repro.core.subset import row_nbytes as _row_nbytes
 from repro.core.types import ServerState
@@ -65,9 +86,14 @@ class DeltaRing:
 
     def __init__(self, params0, *, windows: int = 4,
                  tau_max: Optional[int] = None,
-                 user_cap: Optional[int] = None, subset=None):
+                 user_cap: Optional[int] = None, subset=None,
+                 delta_dtype: str = "fp32"):
         if windows < 1:
             raise ValueError("need at least one retained window")
+        if delta_dtype not in ("fp32", "int8"):
+            raise ValueError(f"delta_dtype must be 'fp32' or 'int8', "
+                             f"got {delta_dtype!r}")
+        self.delta_dtype = delta_dtype
         self.windows = windows
         # a straggler can only be recomputed against a retained snapshot,
         # so the EFFECTIVE staleness bound never exceeds the ring depth —
@@ -90,6 +116,9 @@ class DeltaRing:
         # (subset applies never change it, so it is valid for EVERY window)
         self._base = params0
         self.row_nbytes: Optional[int] = None  # set at first retained bank
+        # fp32-equivalent row bytes (== row_nbytes for fp32 banking): the
+        # baseline the quant residency gate and bytes-saved stat compare to
+        self.row_nbytes_fp32: Optional[int] = None
         self.current = 0
         self._snapshots: Dict[int, object] = {0: self._store(params0)}
         self._banks: Dict[int, List[DeltaBank]] = {0: []}
@@ -110,26 +139,39 @@ class DeltaRing:
         return self.subset.extract(params) if self.subset is not None \
             else params
 
+    def _thaw(self, snap):
+        """Demoted (int8) snapshots dequantize transparently on access."""
+        return dequantize_tree(snap) if isinstance(snap, QuantTree) else snap
+
     def snapshot(self, window: int):
         """FULL params the given window's cohorts were computed against
-        (subset snapshots recombine with the shared backbone on demand)."""
-        snap = self._snapshots[window]
+        (subset snapshots recombine with the shared backbone on demand;
+        int8-demoted snapshots of older windows dequantize on the fly)."""
+        snap = self._thaw(self._snapshots[window])
         if self.subset is not None:
             return merge_subset(self._base, snap)
         return snap
 
     def subset_snapshot(self, window: int):
-        """The window's snapshot as physically stored — the pruned subset
+        """The window's snapshot in stored *structure* — the pruned subset
         tree in subset mode (what head computation subtracts subset delta
-        stacks from), the full params otherwise."""
-        return self._snapshots[window]
+        stacks from), the full params otherwise — dequantized to fp32 when
+        the window was demoted to int8."""
+        return self._thaw(self._snapshots[window])
 
-    def retain(self, bank: DeltaBank) -> None:
+    def retain(self, bank) -> None:
         """Bank-handoff hook: pin ``bank`` to the current window so its
-        device buffer outlives the window (stragglers, head gathers)."""
+        device buffer outlives the window (stragglers, head gathers).
+        ``bank`` is a DeltaBank or, under int8 banking, a
+        :class:`repro.core.quant.QuantizedBank` — the ring only needs
+        ``stacked``/``capacity``/``__len__``."""
         self._banks[self.current].append(bank)
         if self.row_nbytes is None and len(bank):
             self.row_nbytes = _row_nbytes(bank.stacked)
+            self.row_nbytes_fp32 = (
+                fp32_row_nbytes(bank.stacked)
+                if isinstance(bank.stacked, QuantStack)
+                else self.row_nbytes)
 
     def lookup(self, user):
         """-> (window, bank, row) of the user's latest admitted delta, or
@@ -214,6 +256,15 @@ class DeltaRing:
         self._base = state.params
         self._snapshots[self.current] = self._store(state.params)
         self._banks[self.current] = []
+        if self.delta_dtype == "int8":
+            # demote the just-closed window's snapshot (personal leaves) to
+            # int8: only stragglers re-read it, and their banked deltas are
+            # int8+EF anyway.  The CURRENT snapshot stays exact fp32 so
+            # fresh heads carry no quantization noise.
+            prev = self.current - 1
+            if prev in self._snapshots \
+                    and not isinstance(self._snapshots[prev], QuantTree):
+                self._snapshots[prev] = quantize_tree(self._snapshots[prev])
         horizon = self.current - self.windows + 1
         for w in [w for w in self._snapshots if w < horizon]:
             del self._snapshots[w]

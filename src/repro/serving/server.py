@@ -36,12 +36,26 @@ per-user ring residency this buys; the ``partial`` bench gates it).
 Served heads are subset pytrees; callers merge them over the global
 backbone with ``repro.core.merge_subset``.
 
+Quantized delta banking: construct with ``delta_dtype="int8"`` and every
+flush quantizes its cohort's delta stack to int8 rows + per-row-per-leaf
+f32 scales (symmetric absmax) with **error feedback** — each user's
+quantization error is banked as an int8 residual and added to that user's
+next delta before re-quantizing, so banking noise stays a bounded residual
+instead of a bias.  Heads become *lazy*: no fp32 head bank is stored at
+all; ``poll``/``head`` gather ``snapshot − scale·q`` on device
+(:class:`repro.core.quant.QuantizedHeads`), the window apply dispatches
+the :class:`repro.core.quant.QuantStack` through the fused
+``apply_rows_q`` kernel, and per-user ring residency drops ~4x
+(``stats["ring_bytes_per_user"]`` vs ``ring_bytes_per_user_fp32``; the
+``quant`` bench gates ≥ 3.5x at equal convergence).
+
 This surface is in-process; other processes reach it over the socket
 front-end (:class:`repro.serving.transport.TransportServer` bridges
 concurrent connections into submit/flush/poll with deadline-driven flush
 timers and explicit backpressure — see that module for the wire protocol;
 subset-serving servers require clients to declare ``subset_ok`` and stamp
-replies with the subset descriptor).
+replies with the subset descriptor, and int8 bodies are sent only to
+clients that negotiated the ``codec``).
 """
 from __future__ import annotations
 
@@ -53,6 +67,8 @@ import jax.numpy as jnp
 
 from repro.checkpoint.store import load_meta, load_pytree, save_pytree
 from repro.core import init_server_state, staleness_stats
+from repro.core.quant import (QuantStack, QuantTree, QuantizedBank,
+                              QuantizedHeads, ef_quantize_stack)
 from repro.core.subset import SubsetSpec
 from repro.core.types import PersAFLConfig, ServerState
 from repro.fl.engine import CohortEngine, DeltaBank
@@ -63,6 +79,22 @@ from repro.serving.batcher import (MODES, MicroBatcher, Ticket,
 
 def _own_copy(params):
     return jax.tree.map(lambda x: jnp.array(x), params)
+
+
+def _row_of(handle, row: int):
+    """One head row from a ticket/cache handle: device-side either way —
+    an eager gather for fp32 head banks, a fused dequantizing gather for
+    lazy :class:`QuantizedHeads` views."""
+    if isinstance(handle, QuantizedHeads):
+        return handle.row(row)
+    return jax.tree.map(lambda x: x[row], handle.stacked)
+
+
+def _rows_of(handle, rows):
+    if isinstance(handle, QuantizedHeads):
+        return handle.rows(rows)
+    return jax.tree.map(lambda x: jnp.take(x, rows, axis=0),
+                        handle.stacked)
 
 
 class PersonalizationServer:
@@ -85,6 +117,9 @@ class PersonalizationServer:
                   admitted into a single aggregation window (None = off)
     personal_subset : the personal param subset (SubsetSpec spelling);
                   None = full-model personalization
+    delta_dtype : ``"fp32"`` (exact banking) or ``"int8"`` (quantized
+                  banking with per-user error feedback; see the module
+                  docstring)
 
     Each mode's cohort engine is driven by the registry strategy
     ``repro.fl.api.strategy("personalize", mode=...)`` — the serving rules
@@ -96,12 +131,13 @@ class PersonalizationServer:
                  modes: Iterable[str] = MODES, windows: int = 4,
                  tau_max: Optional[int] = None, max_pending: int = 64,
                  head_cache: int = 4096, user_cap: Optional[int] = None,
-                 personal_subset=None):
+                 personal_subset=None, delta_dtype: str = "fp32"):
         self.pcfg = pcfg
         self.loss_fn = loss_fn
         self.state = init_server_state(_own_copy(init_params))
         self.max_pending = max_pending
         self.head_cache = head_cache
+        self.delta_dtype = delta_dtype
         self.personal_subset = SubsetSpec.resolve(personal_subset,
                                                  self.state.params)
 
@@ -125,15 +161,25 @@ class PersonalizationServer:
 
         self.ring = DeltaRing(self.state.params, windows=windows,
                               tau_max=tau_max, user_cap=user_cap,
-                              subset=self.personal_subset)
-        for eng in engines.values():
-            eng.add_bank_hook(self.ring.retain)   # bank handoff
+                              subset=self.personal_subset,
+                              delta_dtype=delta_dtype)
+        if delta_dtype == "fp32":
+            for eng in engines.values():
+                eng.add_bank_hook(self.ring.retain)   # bank handoff
+        # int8 banking: the raw fp32 cohort bank must NOT be pinned — the
+        # flush quantizes it (with the per-user EF residual folded in) and
+        # retains only the QuantizedBank, so the fp32 stack is transient
         n_shards = max(eng._ndev for eng in engines.values())
         self.batcher = MicroBatcher(engines, n_shards=n_shards,
                                     user_cap=user_cap)
 
         # user -> (head DeltaBank, row): device-resident, LRU-evicted
         self._heads: "collections.OrderedDict" = collections.OrderedDict()
+        # user -> (residual QuantizedBank, row): the quantization error of
+        # the user's last banked delta, added to their next delta before
+        # re-quantizing (error feedback); LRU-evicted like the head cache
+        self._residuals: "collections.OrderedDict" = \
+            collections.OrderedDict()
         # one compile per (stacked-shape); reused every flush
         self._jit_heads = jax.jit(lambda p, s: jax.tree.map(
             lambda pp, ss: (pp[None].astype(jnp.float32) - ss).astype(
@@ -170,14 +216,26 @@ class PersonalizationServer:
         for mode, stamp, bank, placed in self.batcher.drain(
                 self.ring.current, self.ring.snapshot,
                 tau_max=self.ring.tau_max):
-            # subset mode: the delta stack is subset-shaped, so the head
-            # subtraction runs against the snapshot's stored subset tree
-            # (same pruned structure) — heads are subset pytrees
-            heads = DeltaBank(
-                stacked=self._jit_heads(self.ring.subset_snapshot(stamp),
-                                        bank.stacked),
-                k=bank.k, stats=self._engine_stats)
-            self.ring.retain(heads)   # head rows live as long as the bank
+            resbank = None
+            if self.delta_dtype == "int8":
+                # quantize the cohort's fp32 delta stack (adding each
+                # user's banked EF residual first) and pin ONLY the int8
+                # bank; heads become a lazy snapshot − scale·q view over
+                # it — no fp32 head bank is ever stored
+                bank, resbank = self._quantize_bank(bank, placed)
+                self.ring.retain(bank)
+                heads = QuantizedHeads(self.ring.subset_snapshot(stamp),
+                                       bank)
+            else:
+                # subset mode: the delta stack is subset-shaped, so the
+                # head subtraction runs against the snapshot's stored
+                # subset tree (same pruned structure) — heads are subset
+                # pytrees
+                heads = DeltaBank(
+                    stacked=self._jit_heads(
+                        self.ring.subset_snapshot(stamp), bank.stacked),
+                    k=bank.k, stats=self._engine_stats)
+                self.ring.retain(heads)  # head rows live with the bank
             for ticket, row in placed:
                 # the ring is the admission authority: the batcher's drain
                 # bound normally pre-filters, but a refusal here must not
@@ -191,6 +249,12 @@ class PersonalizationServer:
                     ticket.status = verdict
                     continue
                 self._cache_head(ticket.user, heads, row)
+                if resbank is not None:
+                    # the NEW residual (this row's quantization error)
+                    # replaces the user's banked one — consumed-and-
+                    # replaced is exactly the EF recurrence.  Refused rows
+                    # never apply, so their user keeps the old residual.
+                    self._cache_residual(ticket.user, resbank, row)
                 # the ticket owns its result: poll resolves THIS handle,
                 # not whatever head the user's latest flush produced
                 ticket.head = (heads, row)
@@ -198,6 +262,60 @@ class PersonalizationServer:
                 ticket.status = "done"
                 served += 1
         return served
+
+    # -- quantized banking (error feedback) --------------------------------
+
+    def _quantize_bank(self, bank: DeltaBank, placed):
+        """int8-quantize a cohort's delta stack with error feedback.
+
+        Each placed user's banked residual (the quantization error of
+        their previous delta) is added to their row before re-quantizing;
+        the new per-row error comes back as an int8 residual bank whose
+        rows replace the users' entries after admission.  Returns
+        ``(delta QuantizedBank, residual QuantizedBank)``.
+        """
+        residual = self._residual_stack(bank.stacked, placed)
+        qstack, resstack = ef_quantize_stack(bank.stacked, residual)
+        qbank = QuantizedBank(qstack, k=bank.k, stats=self._engine_stats)
+        resbank = QuantizedBank(resstack, k=bank.k,
+                                stats=self._engine_stats)
+        return qbank, resbank
+
+    def _residual_stack(self, raw, placed):
+        """fp32 residual stack row-aligned with ``raw`` (None if no placed
+        user has a banked residual).  One dequantizing gather per source
+        residual bank; a user appearing twice in one cohort gets their
+        residual credited once (first row) — crediting both rows would
+        double-apply the error."""
+        seen = set()
+        groups: Dict[int, list] = {}
+        for ticket, row in placed:
+            user = ticket.user
+            if user in seen or user not in self._residuals:
+                continue
+            seen.add(user)
+            src_bank, src_row = self._residuals[user]
+            groups.setdefault(id(src_bank), [src_bank, [], []])
+            groups[id(src_bank)][1].append(src_row)
+            groups[id(src_bank)][2].append(row)
+        if not groups:
+            return None
+        out = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), raw)
+        for src_bank, src_rows, dst_rows in groups.values():
+            vals = src_bank.rows(jnp.asarray(src_rows, jnp.int32))
+            dst = jnp.asarray(dst_rows, jnp.int32)
+            out = jax.tree.map(
+                lambda o, v: o.at[dst].set(v.astype(jnp.float32)),
+                out, vals)
+        return out
+
+    def _cache_residual(self, user, resbank: QuantizedBank,
+                        row: int) -> None:
+        self._residuals[user] = (resbank, row)
+        self._residuals.move_to_end(user)
+        while len(self._residuals) > self.head_cache:
+            self._residuals.popitem(last=False)
 
     def poll(self, ticket: Ticket):
         """None while queued; THIS ticket's head pytree once served.
@@ -237,7 +355,7 @@ class PersonalizationServer:
                 f"served in window {ticket.window}, ring horizon is "
                 f"{horizon} (windows={self.ring.windows}); re-submit")
         heads, row = ticket.head
-        return jax.tree.map(lambda x: x[row], heads.stacked)
+        return _row_of(heads, row)
 
     def _cache_head(self, user, heads: DeltaBank, row: int) -> None:
         self._heads[user] = (heads, row)
@@ -250,7 +368,7 @@ class PersonalizationServer:
         stacked head bank (never a host materialization)."""
         heads, row = self._heads[user]
         self._heads.move_to_end(user)
-        return jax.tree.map(lambda x: x[row], heads.stacked)
+        return _row_of(heads, row)
 
     def stacked_heads(self, users: List):
         """``[len(users), ...]`` stacked heads (batched decode input).
@@ -262,8 +380,7 @@ class PersonalizationServer:
         first = handles[0][0]
         if all(h is first for h, _ in handles):
             rows = jnp.asarray([r for _, r in handles], jnp.int32)
-            return jax.tree.map(lambda x: jnp.take(x, rows, axis=0),
-                                first.stacked)
+            return _rows_of(first, rows)
         return jax.tree.map(lambda *xs: jnp.stack(xs),
                             *[self.head(u) for u in users])
 
@@ -286,11 +403,64 @@ class PersonalizationServer:
 
     # -- restart warm-start ------------------------------------------------
 
+    @staticmethod
+    def _ckpt_snap(snap):
+        """NamedTuples flatten as anonymous tuples in the checkpoint
+        layout, so an int8-demoted snapshot is stored as an explicit
+        marker dict — ``{"__q8__": q, "__q8s__": scales}`` — and re-typed
+        on restore.  Bit-exact: the int8 codes and f32 scales round-trip
+        untouched."""
+        if isinstance(snap, QuantTree):
+            return {"__q8__": snap.q, "__q8s__": snap.scales}
+        return snap
+
+    @staticmethod
+    def _unckpt_snap(snap):
+        if isinstance(snap, dict) and set(snap) == {"__q8__", "__q8s__"}:
+            return QuantTree(
+                q=jax.tree.map(jnp.asarray, snap["__q8__"]),
+                scales=jax.tree.map(jnp.asarray, snap["__q8s__"]))
+        return jax.tree.map(jnp.asarray, snap)
+
+    def _gathered_residuals(self):
+        """(stacked residual QuantStack, users) — one row per cached user,
+        gathered from the source residual banks WITHOUT dequantizing (the
+        int8 codes themselves persist, so save→restore is bit-exact)."""
+        users = list(self._residuals)
+        if not users:
+            return None, []
+        groups: Dict[int, list] = {}
+        for i, user in enumerate(users):
+            src_bank, src_row = self._residuals[user]
+            groups.setdefault(id(src_bank), [src_bank, [], []])
+            groups[id(src_bank)][1].append(src_row)
+            groups[id(src_bank)][2].append(i)
+        template = next(iter(groups.values()))[0].stacked
+        n = len(users)
+        q = jax.tree.map(
+            lambda x: jnp.zeros((n,) + x.shape[1:], x.dtype), template.q)
+        s = jax.tree.map(
+            lambda x: jnp.zeros((n,) + x.shape[1:], x.dtype),
+            template.scales)
+        for src_bank, src_rows, dst_rows in groups.values():
+            src = jnp.asarray(src_rows, jnp.int32)
+            dst = jnp.asarray(dst_rows, jnp.int32)
+            q = jax.tree.map(
+                lambda o, x: o.at[dst].set(jnp.take(x, src, axis=0)),
+                q, src_bank.stacked.q)
+            s = jax.tree.map(
+                lambda o, x: o.at[dst].set(jnp.take(x, src, axis=0)),
+                s, src_bank.stacked.scales)
+        return QuantStack(q=q, scales=s), users
+
     def save(self, path: str) -> None:
         """Checkpoint the serving state through ``repro.checkpoint.store``:
         the typed ServerState, the ring's retained params snapshots +
         window counter + cumulative admission stats, and the head cache as
-        ONE stacked head bank.
+        ONE stacked head bank.  Under int8 banking the demoted snapshots
+        and the per-user EF residuals persist *quantized* (codes + scales,
+        bit-exact), so a restored server continues the error-feedback
+        recurrence exactly where the saved one left off.
 
         A restart restored from this no longer rebuilds the ring empty —
         users keep their cached heads and straggler *requests* stamped
@@ -299,11 +469,14 @@ class PersonalizationServer:
         users re-personalize against the restored snapshots.
         """
         users = list(self._heads)
+        res_stack, res_users = self._gathered_residuals()
         tree = {
             "server_state": self.state.as_dict(),
-            "ring_snapshots": {f"w{w}": snap
+            "ring_snapshots": {f"w{w}": self._ckpt_snap(snap)
                                for w, snap in self.ring._snapshots.items()},
             "head_stack": self.stacked_heads(users) if users else None,
+            "residuals": ({"q": res_stack.q, "scales": res_stack.scales}
+                          if res_stack is not None else None),
         }
         # tau_max persists as REQUESTED, not as clamped to this ring's
         # depth: restoring into a deeper ring must widen back to the
@@ -312,6 +485,8 @@ class PersonalizationServer:
                 "windows": self.ring.windows,
                 "tau_max": self.ring.tau_max_requested,
                 "user_cap": self.ring.user_cap,
+                "delta_dtype": self.delta_dtype,
+                "residual_users": res_users,
                 "personal_subset":
                     self.personal_subset.descriptor(self.state.params)
                     if self.personal_subset is not None else None,
@@ -341,11 +516,13 @@ class PersonalizationServer:
         tau_max = kw.pop("tau_max", meta.get("tau_max"))
         user_cap = kw.pop("user_cap", meta.get("user_cap"))
         subset = kw.pop("personal_subset", meta.get("personal_subset"))
+        delta_dtype = kw.pop("delta_dtype",
+                             meta.get("delta_dtype", "fp32"))
         srv = cls(state.params, loss_fn, pcfg, windows=windows,
                   tau_max=tau_max, user_cap=user_cap,
-                  personal_subset=subset, **kw)
+                  personal_subset=subset, delta_dtype=delta_dtype, **kw)
         srv.state = state
-        snapshots = {int(k[1:]): jax.tree.map(jnp.asarray, snap)
+        snapshots = {int(k[1:]): cls._unckpt_snap(snap)
                      for k, snap in tree["ring_snapshots"].items()}
         srv.ring.load(snapshots, meta["ring_current"],
                       stats=meta.get("ring_stats"))
@@ -354,9 +531,24 @@ class PersonalizationServer:
             heads = DeltaBank(
                 stacked=jax.tree.map(jnp.asarray, tree["head_stack"]),
                 k=len(users), stats=srv._engine_stats)
-            srv.ring.retain(heads)  # device residency across windows
+            if delta_dtype == "fp32":
+                # device residency across windows; under int8 banking this
+                # restored bank is a MATERIALIZED fp32 head stack — the
+                # cache handles pin it, and retaining it would poison the
+                # ring's quantized row_nbytes accounting
+                srv.ring.retain(heads)
             for row, user in enumerate(users):
                 srv._cache_head(user, heads, row)
+        res_users = meta.get("residual_users") or []
+        if res_users and tree.get("residuals") is not None:
+            stack = QuantStack(
+                q=jax.tree.map(jnp.asarray, tree["residuals"]["q"]),
+                scales=jax.tree.map(jnp.asarray,
+                                    tree["residuals"]["scales"]))
+            resbank = QuantizedBank(stack, k=len(res_users),
+                                    stats=srv._engine_stats)
+            for row, user in enumerate(res_users):
+                srv._cache_residual(user, resbank, row)
         return srv
 
     # -- observability -----------------------------------------------------
@@ -368,12 +560,19 @@ class PersonalizationServer:
         s.update({f"batcher_{k}": v for k, v in self.batcher.stats.items()})
         s["live_banks"] = self.ring.live_banks
         s["cached_heads"] = len(self._heads)
-        # per-user steady-state ring residency: one delta row + one head
-        # row per served user per window (both row-shaped, so 2x the bank
-        # row bytes) — the number the partial-personalization bench gates
+        # per-user steady-state ring residency, 2 rows per served user per
+        # window: fp32 banking retains a delta row + a head row; int8
+        # banking retains a delta row + an EF residual row (heads are lazy
+        # views, they add no storage) — both cases 2x the bank row bytes.
+        # The partial bench gates the subset shrink, the quant bench the
+        # codec shrink (vs ``ring_bytes_per_user_fp32``).
         row = self.ring.row_nbytes or 0
+        row_fp32 = self.ring.row_nbytes_fp32 or row
         s["ring_row_bytes"] = row
         s["ring_bytes_per_user"] = 2 * row
+        s["ring_bytes_per_user_fp32"] = 2 * row_fp32
+        s["ring_bytes_saved_per_user"] = 2 * (row_fp32 - row)
+        s["delta_codec"] = self.delta_dtype
         return s
 
     def staleness(self) -> Dict:

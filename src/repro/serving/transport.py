@@ -18,16 +18,16 @@ Wire protocol (version 1) — length-prefixed JSON + binary frames::
 
 All u32 are big-endian.  Client → server ops and their replies:
 
-    SUBMIT {user, mode, subset_ok?}  + npz(batch)
+    SUBMIT {user, mode, subset_ok?, codec_ok?}  + npz(batch)
                                        → OK {ticket, window}
                                          | BUSY {scope, open}
     POLL   {ticket, wait_ms?, subset_ok?}
                                        → OK {status:"queued"}
-                                         | OK {status:"done", subset?}
-                                           + npz(head)
+                                         | OK {status:"done", subset?,
+                                               codec} + npz(head)
                                          | ERR {code: dropped|capped|
                                                 evicted|superseded, error}
-    HEAD   {user, subset_ok?}          → OK {subset?} + npz(head)
+    HEAD   {user, subset_ok?, codec_ok?} → OK {subset?, codec} + npz(head)
                                          | ERR unknown_user
     STATS  {}                          → OK {stats: {...}, subset?}
     FLUSH  {}                          → OK {served}
@@ -41,6 +41,21 @@ structure; merge over the global backbone with
 ``ERR subset_unsupported`` instead of a silently-partial pytree; replies
 that carry a subset body stamp the resolved leaf paths in the header's
 ``subset`` key (both clients record it as ``.last_subset``).
+
+Codec negotiation (compressed wire): npz bodies may carry float leaves as
+symmetric-absmax **int8 codes + one f32 scale per leaf** — the scale rides
+in the same flat layout under a ``__q8s__:<key>`` marker, so an int8 body
+is self-describing and ``decode_pytree`` dequantizes transparently.  The
+negotiation mirrors the subset handshake but FALLS BACK instead of
+refusing: a quantized-banking server (``delta_dtype="int8"``, or an
+explicit ``wire_codec=``) sends int8 head bodies only to clients that
+declared ``codec_ok: true`` at SUBMIT (HEAD negotiates per request);
+non-declaring clients get plain fp32 bodies — a precision downgrade is
+never silent, and replies stamp the body's actual codec in the header's
+``codec`` key (clients record ``.last_codec``).  Uplink SUBMIT bodies are
+the client's choice: constructing a client with ``codec="int8"`` encodes
+its batches quantized (the server decodes either form).  At the ``quant``
+bench's serve config both directions shrink ≥ 3.5x.
 
 Deadline-driven flushing: a SUBMIT that fills the underlying server's
 ``max_pending`` queue flushes synchronously (the micro-batch path); a
@@ -89,9 +104,14 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.checkpoint.store import flatten_pytree, unflatten_pytree
+from repro.checkpoint.store import (flatten_pytree, pack_dtypes,
+                                    unflatten_pytree, unpack_dtypes)
 
 PROTOCOL_VERSION = 1
+WIRE_CODECS = ("fp32", "int8")
+# per-leaf wire-quantization scale marker: like the checkpoint store's
+# ``__dt__:`` markers, the ``:`` keeps it disjoint from every data key
+Q8_KEY_PREFIX = "__q8s__:"
 _U32 = struct.Struct("!I")
 # reject absurd frames instead of buffering our way to OOM
 MAX_FRAME_BYTES = 1 << 28
@@ -135,20 +155,58 @@ class TransportBusy(TransportError):
 # codec: npz pytrees + length-prefixed frames
 # ---------------------------------------------------------------------------
 
-def encode_pytree(tree) -> bytes:
+def encode_pytree(tree, codec: str = "fp32") -> bytes:
     """Pytree → npz bytes in the checkpoint store's flat key layout.
     ``np.asarray`` on each leaf moves device arrays to the host — the wire
     is a host boundary by definition (this is NOT a DeltaBank
-    materialization; the ``host_materializations`` stat stays untouched)."""
+    materialization; the ``host_materializations`` stat stays untouched).
+
+    Non-float dtypes (int8/uint8/bf16/...) round-trip EXACTLY in every
+    codec: ml_dtypes leaves travel as bit patterns + ``__dt__:`` markers
+    (``pack_dtypes``), integer leaves natively.  ``codec="int8"``
+    additionally rewrites each f32/f64 leaf as int8 codes + one f32 scale
+    under ``__q8s__:<key>`` (symmetric absmax — the delta-banking codec
+    reused on the wire); the body stays self-describing, so the decoder
+    needs no negotiated state.
+    """
+    if codec not in WIRE_CODECS:
+        raise ValueError(f"codec must be one of {WIRE_CODECS}, "
+                         f"got {codec!r}")
+    flat = flatten_pytree(tree)
+    if codec == "int8":
+        out = {}
+        for key, val in flat.items():
+            arr = np.asarray(val)
+            if arr.dtype.kind == "f" and arr.dtype.itemsize >= 4:
+                x = arr.astype(np.float32)
+                scale = np.float32(np.max(np.abs(x)) / 127.0
+                                   if x.size else 0.0)
+                safe = scale if scale > 0 else np.float32(1.0)
+                out[key] = np.clip(np.round(x / safe),
+                                   -127, 127).astype(np.int8)
+                out[Q8_KEY_PREFIX + key] = scale
+            else:
+                out[key] = arr
+        flat = out
     buf = io.BytesIO()
-    np.savez(buf, **flatten_pytree(tree))
+    np.savez(buf, **pack_dtypes(flat))
     return buf.getvalue()
 
 
 def decode_pytree(data: bytes):
-    """npz bytes → pytree (dicts/lists of numpy arrays)."""
+    """npz bytes → pytree (dicts/lists of numpy arrays).  Self-describing
+    inverse of :func:`encode_pytree`: ``__dt__:`` markers restore exact
+    non-native dtypes, ``__q8s__:`` markers dequantize int8 leaves."""
     with np.load(io.BytesIO(data)) as z:
-        return unflatten_pytree({k: z[k] for k in z.files})
+        flat = unpack_dtypes({k: z[k] for k in z.files})
+    scales = {k[len(Q8_KEY_PREFIX):]: flat[k] for k in flat
+              if k.startswith(Q8_KEY_PREFIX)}
+    if scales:
+        flat = {k: v for k, v in flat.items()
+                if not k.startswith(Q8_KEY_PREFIX)}
+        for key, scale in scales.items():
+            flat[key] = flat[key].astype(np.float32) * np.float32(scale)
+    return unflatten_pytree(flat)
 
 
 def pack_frame(header: Dict, body: bytes = b"") -> bytes:
@@ -199,9 +257,15 @@ def _no_nagle(sock_like) -> None:
 
 
 def _jsonable(stats: Dict) -> Dict:
-    return {k: (float(v) if isinstance(v, float)
-                else int(v)) for k, v in stats.items()
-            if isinstance(v, (int, float, np.integer, np.floating))}
+    out = {}
+    for k, v in stats.items():
+        if isinstance(v, str):
+            out[k] = v          # e.g. delta_codec
+        elif isinstance(v, (float, np.floating)):
+            out[k] = float(v)
+        elif isinstance(v, (int, np.integer)):
+            out[k] = int(v)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -215,14 +279,17 @@ class _Record:
     flush the failure message (see ``TransportServer._resolve`` /
     ``_safe_call``)."""
 
-    __slots__ = ("ticket", "event", "user", "encoded", "failed")
+    __slots__ = ("ticket", "event", "user", "encoded", "failed", "codec")
 
-    def __init__(self, ticket, user):
+    def __init__(self, ticket, user, codec: str = "fp32"):
         self.ticket = ticket
         self.event = asyncio.Event()
         self.user = user
         self.encoded: Optional[bytes] = None
         self.failed: Optional[str] = None
+        # reply-body codec negotiated at SUBMIT: "int8" only when the
+        # server runs a quantized wire AND this client declared codec_ok
+        self.codec = codec
 
 
 class _Conn:
@@ -263,7 +330,8 @@ class TransportServer:
 
     def __init__(self, server, *, host: str = "127.0.0.1", port: int = 0,
                  flush_ms: float = 10.0, window_ms: Optional[float] = None,
-                 max_inflight: int = 256, conn_inflight: int = 64):
+                 max_inflight: int = 256, conn_inflight: int = 64,
+                 wire_codec: Optional[str] = None):
         self.server = server
         self.host = host
         spec = getattr(server, "personal_subset", None)
@@ -271,6 +339,14 @@ class TransportServer:
         # and matched against clients' subset_ok declarations
         self._subset_desc = spec.descriptor(server.params) \
             if spec is not None else None
+        # the wire codec follows the fronted server's banking codec unless
+        # overridden; int8 bodies still reach only codec_ok clients
+        if wire_codec is None:
+            wire_codec = getattr(server, "delta_dtype", "fp32")
+        if wire_codec not in WIRE_CODECS:
+            raise ValueError(f"wire_codec must be one of {WIRE_CODECS}, "
+                             f"got {wire_codec!r}")
+        self.wire_codec = wire_codec
         self.requested_port = port
         self.flush_ms = flush_ms
         self.window_ms = window_ms
@@ -422,11 +498,18 @@ class TransportServer:
             groups.setdefault(id(bank), (bank, []))[1].append((rec, row))
         for bank, pairs in groups.values():
             rows = jnp.asarray([r for _, r in pairs], jnp.int32)
-            host = jax.device_get(jax.tree.map(
-                lambda x: jnp.take(x, rows, axis=0), bank.stacked))
+            # quantized banking serves LAZY head handles (no .stacked):
+            # .rows() is the fused snapshot − scale·q gather — still one
+            # device gather + one transfer for the whole group
+            if hasattr(bank, "rows"):
+                gathered = bank.rows(rows)
+            else:
+                gathered = jax.tree.map(
+                    lambda x: jnp.take(x, rows, axis=0), bank.stacked)
+            host = jax.device_get(gathered)
             for i, (rec, _) in enumerate(pairs):
                 rec.encoded = encode_pytree(
-                    jax.tree.map(lambda x: x[i], host))
+                    jax.tree.map(lambda x: x[i], host), codec=rec.codec)
                 rec.event.set()
 
     # -- connection handling -----------------------------------------------
@@ -573,7 +656,9 @@ class TransportServer:
             return {"op": "ERR", "code": "server_error", "error": msg}, b""
         tid = conn.next_tid
         conn.next_tid += 1
-        conn.records[tid] = _Record(ticket, user)
+        codec = "int8" if (self.wire_codec == "int8"
+                           and header.get("codec_ok")) else "fp32"
+        conn.records[tid] = _Record(ticket, user, codec=codec)
         self._inflight += 1
         # a full queue already flushed inside submit; otherwise the
         # deadline timer guarantees the partial queue drains within
@@ -612,7 +697,8 @@ class TransportServer:
         # terminal either way: the backpressure slot frees NOW
         del conn.records[tid]
         self._inflight -= 1
-        ok = {"op": "OK", "status": "done", "window": self.server.window}
+        ok = {"op": "OK", "status": "done", "window": self.server.window,
+              "codec": rec.codec}
         if self._subset_desc is not None:
             ok["subset"] = self._subset_desc
         if rec.encoded is not None:
@@ -628,7 +714,7 @@ class TransportServer:
             else:
                 code = "evicted"
             return {"op": "ERR", "code": code, "error": str(e)}, b""
-        return ok, encode_pytree(head)
+        return ok, encode_pytree(head, codec=rec.codec)
 
     def _op_head(self, header: Dict) -> Tuple[Dict, bytes]:
         refusal = self._subset_refusal(header)
@@ -640,10 +726,12 @@ class TransportServer:
         except KeyError:
             return {"op": "ERR", "code": "unknown_user",
                     "error": f"no cached head for {user!r}"}, b""
-        ok = {"op": "OK", "user": user}
+        codec = "int8" if (self.wire_codec == "int8"
+                           and header.get("codec_ok")) else "fp32"
+        ok = {"op": "OK", "user": user, "codec": codec}
         if self._subset_desc is not None:
             ok["subset"] = self._subset_desc
-        return ok, encode_pytree(head)
+        return ok, encode_pytree(head, codec=codec)
 
     def _op_stats(self) -> Tuple[Dict, bytes]:
         stats = _jsonable(self.server.stats)
@@ -651,6 +739,7 @@ class TransportServer:
                       for k, v in _jsonable(self.stats).items()})
         stats["transport_inflight"] = self._inflight
         stats["window"] = self.server.window
+        stats["wire_codec"] = self.wire_codec
         ok = {"op": "OK", "stats": stats}
         if self._subset_desc is not None:
             ok["subset"] = self._subset_desc
@@ -687,12 +776,23 @@ class TransportClient:
     server personalizes a subset the served head is a *subset pytree* —
     ``last_subset`` holds the reply's leaf-path descriptor (None for
     full-model servers); merge with ``repro.core.merge_subset``.
+
+    Codec-aware: ``codec="int8"`` declares ``codec_ok`` (accept int8 head
+    bodies from a quantized-wire server) AND quantizes this client's own
+    SUBMIT batch bodies; the default ``"fp32"`` client negotiates nothing
+    and always receives fp32 bodies.  ``last_codec`` records each head
+    reply's actual body codec.
     """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
-                 timeout: float = 30.0):
+                 timeout: float = 30.0, codec: str = "fp32"):
+        if codec not in WIRE_CODECS:
+            raise ValueError(f"codec must be one of {WIRE_CODECS}, "
+                             f"got {codec!r}")
         self.timeout = timeout
+        self.codec = codec
         self.last_subset = None
+        self.last_codec = None
         self._sock = socket.create_connection((host, port),
                                               timeout=timeout)
         _no_nagle(self._sock)
@@ -718,7 +818,9 @@ class TransportClient:
 
     def submit(self, user, batch, mode: str = "C") -> int:
         h, _ = self._rpc({"op": "SUBMIT", "user": user, "mode": mode,
-                          "subset_ok": True}, encode_pytree(batch))
+                          "subset_ok": True,
+                          "codec_ok": self.codec == "int8"},
+                         encode_pytree(batch, codec=self.codec))
         return int(h["ticket"])
 
     def poll(self, ticket: int, wait_ms: Optional[float] = None):
@@ -730,11 +832,14 @@ class TransportClient:
         if h["status"] != "done":
             return None
         self.last_subset = h.get("subset")
+        self.last_codec = h.get("codec", "fp32")
         return decode_pytree(b)
 
     def head(self, user):
-        h, b = self._rpc({"op": "HEAD", "user": user, "subset_ok": True})
+        h, b = self._rpc({"op": "HEAD", "user": user, "subset_ok": True,
+                          "codec_ok": self.codec == "int8"})
         self.last_subset = h.get("subset")
+        self.last_codec = h.get("codec", "fp32")
         return decode_pytree(b)
 
     def stats(self) -> Dict:
@@ -764,13 +869,20 @@ class TransportClient:
 
 class AsyncTransportClient:
     """Asyncio twin of :class:`TransportClient` — the load generator runs
-    N of these concurrently on one event loop.  Subset-aware like the
-    blocking client (``subset_ok`` declared, ``last_subset`` recorded)."""
+    N of these concurrently on one event loop.  Subset- and codec-aware
+    like the blocking client (``subset_ok`` declared, ``codec=`` opt-in,
+    ``last_subset``/``last_codec`` recorded)."""
 
-    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 codec: str = "fp32"):
+        if codec not in WIRE_CODECS:
+            raise ValueError(f"codec must be one of {WIRE_CODECS}, "
+                             f"got {codec!r}")
         self.host = host
         self.port = port
+        self.codec = codec
         self.last_subset = None
+        self.last_codec = None
         self._reader: Optional[asyncio.StreamReader] = None
         self._writer: Optional[asyncio.StreamWriter] = None
 
@@ -792,7 +904,9 @@ class AsyncTransportClient:
 
     async def submit(self, user, batch, mode: str = "C") -> int:
         h, _ = await self._rpc({"op": "SUBMIT", "user": user, "mode": mode,
-                                "subset_ok": True}, encode_pytree(batch))
+                                "subset_ok": True,
+                                "codec_ok": self.codec == "int8"},
+                               encode_pytree(batch, codec=self.codec))
         return int(h["ticket"])
 
     async def poll(self, ticket: int, wait_ms: Optional[float] = None):
@@ -803,12 +917,15 @@ class AsyncTransportClient:
         if h["status"] != "done":
             return None
         self.last_subset = h.get("subset")
+        self.last_codec = h.get("codec", "fp32")
         return decode_pytree(b)
 
     async def head(self, user):
         h, b = await self._rpc({"op": "HEAD", "user": user,
-                                "subset_ok": True})
+                                "subset_ok": True,
+                                "codec_ok": self.codec == "int8"})
         self.last_subset = h.get("subset")
+        self.last_codec = h.get("codec", "fp32")
         return decode_pytree(b)
 
     async def stats(self) -> Dict:
