@@ -28,6 +28,10 @@
                         SUBMIT/HEAD wire bodies ≥ 3.5x smaller (gated),
                         fig2-config convergence pin fp32 vs int8+EF
                         (|Δacc| ≤ 0.1, gated), host_materializations == 0
+  scale               — scenario engine at 10^3→10^6 simulated clients:
+                        DeviceScheduler window cost (sub-linear in n,
+                        gated), robust admission of adversary-corrupted
+                        cohort banks, host_materializations == 0 (gated)
   kernels             — Pallas kernels (interpret) vs jnp oracle, µs/call
 
 Prints ``name,us_per_call,derived`` CSV lines (plus per-figure CSV blocks)
@@ -790,6 +794,106 @@ def quant():
     return ring_ratio
 
 
+def scale():
+    """Scenario engine at 10^3 → 10^6 simulated clients (FAST caps at
+    10^5): per window, the DeviceScheduler forms the cohort on device, a
+    synthetic cohort delta bank is corrupted by the scenario's
+    adversaries (``scale_rows``), admitted through the robust clip path
+    and applied with one fused ``apply_admitted_rows`` pass.  Gates:
+
+      * sub-linear wall-clock — growing n by 1000x (100x FAST) must grow
+        s/window by well under that factor (the whole point of the
+        device-resident scheduler; the Python heap is O(n log n) pops
+        per simulated second);
+      * ``host_materializations == 0`` — no per-client or per-delta
+        array ever crosses to the host (cohort ids/times and row norms
+        are the only device→host traffic, all [cohort_cap]-sized).
+    """
+    from repro.core import (apply_admitted_rows, bank_row_norms,
+                            init_server_state, mask_rows,
+                            robust_admission_weights, scale_rows)
+    from repro.fl.engine import DeltaBank
+    from repro.fl.scenario import (Adversarial, DeviceScheduler, Diurnal,
+                                   ScenarioSpec, Tier)
+    ns = [1_000, 10_000, 100_000] if FAST \
+        else [1_000, 10_000, 100_000, 1_000_000]
+    windows = 3 if FAST else 5
+    d = 1 << 16                    # synthetic per-client delta width
+    key = jax.random.PRNGKey(0)
+    rows_out = []
+    print("scale,n,s_per_window,arrivals,dropouts,corrupted,clipped")
+    for n in ns:
+        spec = ScenarioSpec(
+            n_clients=n, seed=0,
+            tiers=(Tier("fast", 0.5, 0.7), Tier("slow", 0.5, 1.6)),
+            diurnal=Diurnal(period=400.0, floor=0.25), dropout=0.02,
+            adversarial=Adversarial(frac=0.05, kinds=("scale",
+                                                      "sign_flip")))
+        model = spec.build()
+        sched = DeviceScheduler(model, window_len=30.0, cohort_cap=256,
+                                cycles_per_window=8)
+        cap = sched.cohort_cap
+        state = init_server_state({"w": jnp.zeros(d, jnp.float32)})
+        base = {"w": 0.01 * jax.random.normal(key, (cap, d), jnp.float32)}
+        bank_stats = {}
+        corrupted = clipped = 0
+        sched.next_window()                  # compile/warm-up window
+        t0 = time.time()
+        for _ in range(windows):
+            ids, _times = sched.next_window()
+            fill = len(ids)
+            if fill == 0:
+                continue
+            bank = DeltaBank(stacked=base, k=fill, stats=bank_stats)
+            fac = model.corruption_factors(ids)
+            vec = np.ones(cap, np.float32)
+            vec[:fill] = fac
+            stacked = scale_rows(bank.stacked, vec)
+            corrupted += int(np.sum(fac != 1.0))
+            norms = bank_row_norms(stacked)
+            weights, keep, info = robust_admission_weights(
+                cap, [(j, 0) for j in range(fill)], norms, beta=0.1,
+                count=fill, method="clip")
+            clipped += info["clipped"]
+            if not bool(keep.all()):
+                stacked = mask_rows(stacked, keep)
+            state = apply_admitted_rows(state, stacked, weights, fill,
+                                        staleness_max=0,
+                                        staleness_sum=0.0)
+        jax.block_until_ready(state.params["w"])
+        wall = time.time() - t0
+        host_mat = bank_stats.get("host_materializations", 0)
+        row = {"n": n, "s_per_window": wall / windows,
+               "arrivals": sched.stats["arrivals"],
+               "dropouts": sched.stats["dropouts"],
+               "overflow_arrivals": sched.stats["overflow_arrivals"],
+               "corrupted_rows": corrupted, "clipped": clipped,
+               "host_materializations": host_mat}
+        rows_out.append(row)
+        print(f"scale,{n},{row['s_per_window']:.4f},"
+              f"{row['arrivals']},{row['dropouts']},{corrupted},{clipped}")
+    n_ratio = rows_out[-1]["n"] / rows_out[0]["n"]
+    t_ratio = (rows_out[-1]["s_per_window"]
+               / max(rows_out[0]["s_per_window"], 1e-9))
+    gates = {
+        # "sub-linear": 1000x clients may cost at most 0.2x that in time
+        "sublinear_time": t_ratio <= 0.2 * n_ratio,
+        "zero_host_materializations":
+            all(r["host_materializations"] == 0 for r in rows_out),
+        "cohorts_formed": all(r["arrivals"] > 0 for r in rows_out),
+    }
+    result = {"rows": rows_out, "n_ratio": n_ratio, "t_ratio": t_ratio,
+              "windows": windows, "cohort_cap": 256, "fast": FAST,
+              "gates": gates}
+    _save("scale", result)
+    _bench_log("scale", result)
+    print(f"scale_sublinear,{t_ratio:.1f},n_ratio={n_ratio:.0f}")
+    for gate, ok in gates.items():
+        if not ok:
+            raise RuntimeError(f"scale gate failed: {gate} ({result})")
+    return t_ratio
+
+
 def kernels():
     """µs/call for each Pallas kernel (interpret) and its jnp oracle."""
     from repro.kernels.flash_attention.kernel import flash_attention_fwd
@@ -853,6 +957,7 @@ BENCHES = {
     "serve_transport": serve_transport,
     "partial": partial,
     "quant": quant,
+    "scale": scale,
     "kernels": kernels,
 }
 

@@ -4,7 +4,9 @@ from repro.core.client import client_update, split_batches_for_option  # noqa: F
 from repro.core.server import (init_server_state, apply_update,  # noqa: F401
                                apply_buffered, apply_buffered_rows,
                                apply_admitted_rows, admission_weights,
-                               staleness_stats)
+                               robust_admission_weights,
+                               robust_flush_weights, bank_row_norms,
+                               mask_rows, scale_rows, staleness_stats)
 from repro.core.maml import maml_grad, personalize_maml          # noqa: F401
 from repro.core.moreau import me_grad, personalize_me, solve_prox  # noqa: F401
 from repro.core.subset import (SubsetSpec, leaf_paths,           # noqa: F401

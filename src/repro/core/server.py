@@ -186,6 +186,110 @@ def _apply_rows_q_state_jit(donate: bool):
     return apply
 
 
+@functools.lru_cache(maxsize=None)
+def _row_norms_jit():
+    @jax.jit
+    def norms(stack):
+        tot = None
+        for leaf in jax.tree_util.tree_leaves(stack):
+            s = jnp.sum(jnp.square(leaf.astype(jnp.float32))
+                        .reshape(leaf.shape[0], -1), axis=1)
+            tot = s if tot is None else tot + s
+        return jnp.sqrt(tot)
+    return norms
+
+
+@functools.lru_cache(maxsize=None)
+def _row_norms_q_jit():
+    @jax.jit
+    def norms(q_tree, scales_tree):
+        tot = None
+        for q, sc in zip(jax.tree_util.tree_leaves(q_tree),
+                         jax.tree_util.tree_leaves(scales_tree)):
+            s = jnp.square(sc.astype(jnp.float32)) \
+                * jnp.sum(jnp.square(q.astype(jnp.float32))
+                          .reshape(q.shape[0], -1), axis=1)
+            tot = s if tot is None else tot + s
+        return jnp.sqrt(tot)
+    return norms
+
+
+def bank_row_norms(delta_stack) -> np.ndarray:
+    """Per-row L2 norms of a stacked bank, computed ON DEVICE.
+
+    One fused reduction over the whole stack per call; the only host
+    transfer is the ``[capacity]`` f32 norm vector — never a delta row
+    (the robust-admission path preserves ``host_materializations == 0``).
+    QuantStacks reduce in the quantized domain (per-leaf
+    ``|scale| · ‖q‖₂``, exact for the symmetric codec) without ever
+    materializing an fp32 row.  Rows holding NaN/Inf report non-finite
+    norms, which is how :func:`robust_admission_weights` detects poisoned
+    deltas.
+    """
+    if isinstance(delta_stack, QuantStack):
+        return np.asarray(_row_norms_q_jit()(delta_stack.q,
+                                             delta_stack.scales))
+    return np.asarray(_row_norms_jit()(delta_stack))
+
+
+@functools.lru_cache(maxsize=None)
+def _mask_rows_jit():
+    @jax.jit
+    def mask(stack, keep):
+        def one(x):
+            k = keep.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jnp.where(k, x, jnp.zeros((), x.dtype))
+        return jax.tree_util.tree_map(one, stack)
+    return mask
+
+
+def mask_rows(delta_stack, keep):
+    """Zero out the rows of a stacked bank where ``keep`` is False.
+
+    Weight-zeroing alone cannot neutralize a poisoned row: the fused
+    apply computes ``Σ w_j · Δ_j`` and ``0 · NaN = NaN``, so a NaN row
+    survives any weight vector.  This ``where``-based mask rewrites the
+    row storage itself (on device, one pass) and is applied before
+    :func:`apply_admitted_rows` whenever :func:`robust_admission_weights`
+    reports non-finite rows.  QuantStacks mask codes and scales alike.
+    """
+    keep = jnp.asarray(keep, bool)
+    if isinstance(delta_stack, QuantStack):
+        return QuantStack(q=_mask_rows_jit()(delta_stack.q, keep),
+                          scales=_mask_rows_jit()(delta_stack.scales,
+                                                  keep))
+    return _mask_rows_jit()(delta_stack, keep)
+
+
+@functools.lru_cache(maxsize=None)
+def _scale_rows_jit():
+    @jax.jit
+    def scale(stack, factors):
+        def one(x):
+            f = factors.reshape((-1,) + (1,) * (x.ndim - 1))
+            return (x.astype(jnp.float32) * f).astype(x.dtype)
+        return jax.tree_util.tree_map(one, stack)
+    return scale
+
+
+def scale_rows(delta_stack, factors):
+    """Per-row scaling of a stacked bank (one on-device pass).
+
+    The adversarial-corruption injection point of the scenario engine
+    (:mod:`repro.fl.scenario`): a ``[capacity]`` f32 factor vector (1.0
+    honest, ±magnitude scaled/sign-flipped, NaN poisoned) multiplies each
+    row in place of per-row host traffic.  QuantStacks scale their f32
+    scale vectors only — int8 codes are untouched, so corruption
+    round-trips the codec exactly like any other amplitude change.
+    """
+    factors = jnp.asarray(factors, jnp.float32)
+    if isinstance(delta_stack, QuantStack):
+        return QuantStack(q=delta_stack.q,
+                          scales=_scale_rows_jit()(delta_stack.scales,
+                                                   factors))
+    return _scale_rows_jit()(delta_stack, factors)
+
+
 def admission_weights(capacity: int, rows: List[Tuple[int, int]], *,
                       beta: float, count: int, damping: float = 0.0,
                       tau_max: Optional[int] = None) -> np.ndarray:
@@ -213,6 +317,172 @@ def admission_weights(capacity: int, rows: List[Tuple[int, int]], *,
         # under-applied the duplicate and skewed mean_staleness
         w[idx] += wt
     return w
+
+
+def robust_admission_weights(
+        capacity: int, rows: List[Tuple[int, int]], norms, *, beta: float,
+        count: int, damping: float = 0.0, tau_max: Optional[int] = None,
+        method: str = "clip", clip_norm: Optional[float] = None,
+        trim_frac: float = 0.1) -> Tuple[np.ndarray, np.ndarray, Dict]:
+    """Byzantine-robust variants of :func:`admission_weights`.
+
+    ``norms`` is the ``[capacity]`` per-row L2 norm vector from
+    :func:`bank_row_norms` (the only statistic the defense needs — delta
+    rows never cross to the host).  Two methods:
+
+      * ``"clip"`` — norm clipping: an admission whose row norm exceeds
+        ``clip_norm`` keeps its direction but is scaled down by
+        ``clip_norm / norm``; with ``clip_norm=None`` the bound is
+        2 × median of the finite admitted norms (self-calibrating — an
+        honest-majority buffer sets the scale, adversarially inflated
+        rows can't move a median).  Base weight is β/count, like the
+        plain path.
+      * ``"trim"`` — norm-based trimmed mean: admissions are sorted by
+        row norm and ``ceil(trim_frac · k)`` are discarded from EACH
+        tail (sign-flipped or inflated rows live in the tails); the
+        survivors split β evenly (β/|survivors| — ``count`` is ignored),
+        so the flush stays a mean over what it kept.  At least one
+        admission always survives.
+
+    Both methods drop admissions on non-finite rows (NaN/Inf) outright.
+    Staleness handling matches the plain path: rows past ``tau_max`` are
+    zeroed, ``damping`` applies ``(1+τ)^-a`` per admission.
+
+    Returns ``(weights, keep, info)``: the ``[capacity]`` f32 weight
+    vector; a ``[capacity]`` bool row mask that is False on non-finite
+    rows — the caller MUST route the stack through :func:`mask_rows`
+    when ``keep`` isn't all-True, because ``0 · NaN = NaN`` means a
+    zero weight alone cannot neutralize a poisoned row; and an ``info``
+    dict (``clipped`` / ``trimmed`` / ``nonfinite`` admission counts and
+    the effective ``clip_norm``) for the schedulers' stats surface.
+    """
+    if method not in ("clip", "trim"):
+        raise ValueError(f"robust method must be 'clip' or 'trim', "
+                         f"got {method!r}")
+    norms = np.asarray(norms, np.float64)
+    keep = np.isfinite(norms)
+    admissible = [(idx, tau) for idx, tau in rows
+                  if tau_max is None or tau <= tau_max]
+    finite = [(idx, tau) for idx, tau in admissible if keep[idx]]
+    info = {"clipped": 0, "trimmed": 0,
+            "nonfinite": len(admissible) - len(finite), "clip_norm": 0.0}
+    w = np.zeros(capacity, np.float32)
+    if not finite:
+        return w, keep, info
+    a_norms = np.array([norms[idx] for idx, _ in finite])
+    if method == "clip":
+        c = float(clip_norm) if clip_norm is not None \
+            else 2.0 * float(np.median(a_norms))
+        info["clip_norm"] = c
+        for (idx, tau), nrm in zip(finite, a_norms):
+            wt = beta / count
+            if damping:
+                wt *= (1.0 + tau) ** (-damping)
+            if nrm > c and nrm > 0.0:
+                wt *= c / nrm
+                info["clipped"] += 1
+            w[idx] += wt
+    else:
+        k = len(finite)
+        cut = int(np.ceil(trim_frac * k))
+        if 2 * cut >= k:
+            cut = (k - 1) // 2
+        order = np.argsort(a_norms, kind="stable")
+        survivors = order[cut: k - cut]
+        info["trimmed"] = k - len(survivors)
+        for j in survivors:
+            idx, tau = finite[j]
+            wt = beta / len(survivors)
+            if damping:
+                wt *= (1.0 + tau) ** (-damping)
+            w[idx] += wt
+    return w, keep, info
+
+
+def robust_flush_weights(
+        groups, *, beta: float, count: int, damping: float = 0.0,
+        tau_max: Optional[int] = None, method: str = "clip",
+        clip_norm: Optional[float] = None,
+        trim_frac: float = 0.1) -> Tuple[Dict, Dict]:
+    """:func:`robust_admission_weights` for ONE flush spanning several
+    banks.
+
+    The flush — not the bank — is the statistical population.  A buffered
+    scheduler's M admissions (and a serving window's) split across banks:
+    in-flight clients were computed in an earlier window's bank, so a
+    group can hold just 1–2 rows — and a 1-row group cannot see that its
+    own row is the outlier (the median of a single corrupted norm IS
+    that norm, so self-calibrating clip never fires; a 2-row group
+    clamps trim's cut to zero).  Calibrating per group let most
+    adversarial rows through; calibrating here, over all of the flush's
+    admissions, restores the honest-majority assumption the defenses
+    rest on.
+
+    ``groups`` maps a bank key to ``(bank, rows)`` where ``bank`` has
+    ``.stacked`` / ``.capacity`` and ``rows`` is the ``(idx, tau)``
+    admission list (the grouping both callers already build).  Clip
+    computes ONE bound — ``clip_norm`` or 2 × median of the flush's
+    finite admitted norms — and delegates per bank with that explicit
+    bound; trim ranks the flush's admissions globally, cuts
+    ``ceil(trim_frac · k)`` from each tail, and splits β over the global
+    survivor set.  Per-row math (β/count base weight for clip,
+    ``(1+τ)^-damping``, ``tau_max`` zeroing, non-finite drops) matches
+    the per-bank function exactly.
+
+    Returns ``({key: (weights, keep)}, info)`` — per-bank weight vectors
+    and non-finite row masks under the same mask-don't-zero contract
+    (route the stack through :func:`mask_rows` when ``keep`` isn't
+    all-True), plus one aggregated ``info`` dict.
+    """
+    if method not in ("clip", "trim"):
+        raise ValueError(f"robust method must be 'clip' or 'trim', "
+                         f"got {method!r}")
+    norms_by = {key: np.asarray(bank_row_norms(bank.stacked), np.float64)
+                for key, (bank, _) in groups.items()}
+    info = {"clipped": 0, "trimmed": 0, "nonfinite": 0, "clip_norm": 0.0}
+    out = {}
+    if method == "clip":
+        admitted = np.array([norms_by[key][idx]
+                             for key, (_, rows) in groups.items()
+                             for idx, tau in rows
+                             if tau_max is None or tau <= tau_max])
+        finite = admitted[np.isfinite(admitted)]
+        c = float(clip_norm) if clip_norm is not None \
+            else (2.0 * float(np.median(finite)) if finite.size else 0.0)
+        info["clip_norm"] = c
+        for key, (bank, rows) in groups.items():
+            w, keep, gi = robust_admission_weights(
+                bank.capacity, rows, norms_by[key], beta=beta,
+                count=count, damping=damping, tau_max=tau_max,
+                method="clip", clip_norm=c)
+            for stat in ("clipped", "trimmed", "nonfinite"):
+                info[stat] += gi[stat]
+            out[key] = (w, keep)
+        return out, info
+    entries = [(key, idx, tau, norms_by[key][idx])
+               for key, (_, rows) in groups.items()
+               for idx, tau in rows
+               if tau_max is None or tau <= tau_max]
+    finite_e = [e for e in entries if np.isfinite(e[3])]
+    info["nonfinite"] = len(entries) - len(finite_e)
+    survivors = []
+    if finite_e:
+        k = len(finite_e)
+        cut = int(np.ceil(trim_frac * k))
+        if 2 * cut >= k:
+            cut = (k - 1) // 2
+        order = np.argsort([e[3] for e in finite_e], kind="stable")
+        survivors = [finite_e[j] for j in order[cut: k - cut]]
+        info["trimmed"] = k - len(survivors)
+    w_by = {key: np.zeros(bank.capacity, np.float32)
+            for key, (bank, _) in groups.items()}
+    for key, idx, tau, _ in survivors:
+        wt = beta / len(survivors)
+        if damping:
+            wt *= (1.0 + tau) ** (-damping)
+        w_by[key][idx] += wt
+    return {key: (w_by[key], np.isfinite(norms_by[key]))
+            for key in groups}, info
 
 
 def apply_buffered_rows(state: ServerState, delta_stack, weights, count,

@@ -6,3 +6,6 @@ from repro.fl.api import (ApplyPolicy, FLRun, History,        # noqa: F401
 from repro.fl.simulator import (AsyncSimulator,               # noqa: F401
                                 BufferedAsyncSimulator, SyncSimulator)
 from repro.fl.evaluate import make_personalized_eval          # noqa: F401
+from repro.fl.scenario import (Adversarial, ChurnModel,       # noqa: F401
+                               DeviceScheduler, Diurnal, EventStream,
+                               ScenarioSpec, Tier)

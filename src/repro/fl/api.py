@@ -48,7 +48,9 @@ import numpy as np
 
 from repro.core import (PersAFLConfig, admission_weights,
                         apply_buffered_rows, apply_update, client_update,
-                        init_server_state, split_batches_for_option)
+                        init_server_state, mask_rows,
+                        robust_flush_weights, scale_rows,
+                        split_batches_for_option)
 from repro.core.moreau import solve_prox
 from repro.core.server import staleness_stats
 from repro.data.federated import sample_batches
@@ -386,6 +388,7 @@ class Immediate(ApplyPolicy):
         hist.staleness.append(staleness)
         run.state = apply_update(run.state, delta, run.pcfg.beta, staleness,
                                  damping=run.pcfg.staleness_damping)
+        run._record_window(now, 1, [staleness])
         run._t += 1
         if eval_fn is not None and run._t % eval_every == 0:
             hist.times.append(now)
@@ -401,10 +404,30 @@ class Buffered(ApplyPolicy):
     per-delta FedAsync damping ``(1+τ)^{-a}`` and padding masks are rows
     of one ``[bucket]`` array) — flushes never move per-client deltas to
     the host.  t advances in M-sized jumps; staleness Σ/max are accounted
-    per contributing delta."""
+    per contributing delta.
 
-    def __init__(self, m: Optional[int] = None):
+    ``robust="clip"`` / ``"trim"`` routes the flush through
+    :func:`repro.core.robust_flush_weights` instead — per-row norm
+    clipping or a norm-based trimmed mean calibrated over the WHOLE
+    buffer, across the banks its rows live in (row norms reduced on
+    device via :func:`repro.core.bank_row_norms`; non-finite rows zeroed
+    through :func:`repro.core.mask_rows`), the defense
+    against the scenario engine's adversarial clients
+    (:class:`repro.fl.scenario.ChurnModel`).  Under trim, t still
+    advances by the full buffer size — trimmed admissions contribute a
+    zero weight, exactly like tau_max-dropped rows on the plain path."""
+
+    def __init__(self, m: Optional[int] = None, *,
+                 robust: Optional[str] = None,
+                 clip_norm: Optional[float] = None,
+                 trim_frac: float = 0.1):
+        if robust not in (None, "clip", "trim"):
+            raise ValueError(f"robust must be None, 'clip' or 'trim', "
+                             f"got {robust!r}")
         self.m = m                # configured; None = the run's pcfg M
+        self.robust = robust
+        self.clip_norm = clip_norm
+        self.trim_frac = trim_frac
 
     def start(self, run):
         # resolved per run — m=None must re-read each run's buffer_size
@@ -433,14 +456,35 @@ class Buffered(ApplyPolicy):
             bank, idx = run._computed.pop(r)
             groups.setdefault(id(bank), (bank, []))[1].append((idx, s))
         t_old = run._t
-        for bank, rows in groups.values():
-            weights = admission_weights(bank.capacity, rows,
-                                        beta=run.pcfg.beta, count=m,
-                                        damping=damping)
+        robust_info = {"clipped": 0, "trimmed": 0, "nonfinite": 0}
+        if self.robust is not None:
+            # one call for the whole flush: the defense calibrates over
+            # ALL m admissions, not per owning bank — a corrupted row
+            # alone in its 1-row group would set its own clip median
+            per_bank, robust_info = robust_flush_weights(
+                groups, beta=run.pcfg.beta, count=m, damping=damping,
+                method=self.robust, clip_norm=self.clip_norm,
+                trim_frac=self.trim_frac)
+        for key, (bank, rows) in groups.items():
+            if self.robust is not None:
+                weights, keep = per_bank[key]
+                # non-finite rows are masked out of the stack, not just
+                # zero-weighted: 0 × NaN = NaN
+                stack = bank.stacked if bool(keep.all()) \
+                    else mask_rows(bank.stacked, keep)
+            else:
+                weights = admission_weights(bank.capacity, rows,
+                                            beta=run.pcfg.beta, count=m,
+                                            damping=damping)
+                stack = bank.stacked
             run.state = apply_buffered_rows(
-                run.state, bank.stacked, weights, len(rows),
+                run.state, stack, weights, len(rows),
                 staleness_max=max(s for _, s in rows),
                 staleness_sum=float(sum(s for _, s in rows)))
+        run._record_window(now, m, [s for _, s in self._buffer],
+                           robust_clipped=robust_info["clipped"],
+                           robust_trimmed=robust_info["trimmed"],
+                           robust_nonfinite=robust_info["nonfinite"])
         self._buffer = []
         run._t = t_old + m
         # t jumps by M per flush: eval whenever a multiple of eval_every
@@ -468,9 +512,14 @@ def immediate() -> Immediate:
     return Immediate()
 
 
-def buffered(m: Optional[int] = None) -> Buffered:
-    """``m=None`` takes ``pcfg.buffer_size`` at run time."""
-    return Buffered(m)
+def buffered(m: Optional[int] = None, *, robust: Optional[str] = None,
+             clip_norm: Optional[float] = None,
+             trim_frac: float = 0.1) -> Buffered:
+    """``m=None`` takes ``pcfg.buffer_size`` at run time.  ``robust=``
+    selects the Byzantine-robust flush ("clip" / "trim"; see
+    :class:`Buffered`)."""
+    return Buffered(m, robust=robust, clip_norm=clip_norm,
+                    trim_frac=trim_frac)
 
 
 def sync_barrier(m: int = 10) -> SyncBarrier:
@@ -520,7 +569,11 @@ class FLRun:
                  pcfg: PersAFLConfig, delays,
                  strategy="persafl", schedule="immediate",
                  batch_size: int = 32, seed: int = 0,
-                 vectorized: bool = True, cohort_impl: str = "auto"):
+                 vectorized: bool = True, cohort_impl: str = "auto",
+                 scheduler: str = "auto"):
+        if scheduler not in ("auto", "heap", "device"):
+            raise ValueError(f"scheduler must be 'auto', 'heap' or "
+                             f"'device', got {scheduler!r}")
         self.clients = clients
         self.pcfg = pcfg
         self.delays = delays
@@ -529,6 +582,7 @@ class FLRun:
         self.loss_fn = loss_fn
         self.strategy = resolve_strategy(strategy).bind(pcfg, loss_fn)
         self.schedule = resolve_schedule(schedule)
+        self.scheduler = scheduler
         self.state = init_server_state(_own_copy(init_params))
         self.engine = CohortEngine(self.strategy.pcfg, loss_fn,
                                    vectorized=vectorized,
@@ -536,6 +590,14 @@ class FLRun:
                                    strategy=self.strategy)
         self._cstates: List = [None] * len(clients)
         self.final_stats: Optional[Dict] = None
+        # per-window scheduler observability (see _record_window)
+        self.scheduler_stats: Dict = {
+            "scheduler": scheduler, "windows": 0, "cohort_fill_sum": 0,
+            "cohort_fill_max": 0, "dropouts": 0, "corrupted_rows": 0,
+            "robust_clipped": 0, "robust_trimmed": 0,
+            "robust_nonfinite": 0}
+        self.window_log: List[Dict] = []
+        self._window_log_cap = 1024
 
     # -- shared plumbing ---------------------------------------------------
 
@@ -568,6 +630,39 @@ class FLRun:
             self._cstates[i] = new
         self.strategy.post_round(updates, len(self.clients))
 
+    @property
+    def stats(self) -> Dict:
+        """Engine + per-window scheduler counters, one machine-readable
+        dict (churn sweeps consume this; ``window_log`` holds the
+        per-window records)."""
+        s = dict(self.engine.stats)
+        s.update(self.scheduler_stats)
+        s["mean_cohort_fill"] = (
+            self.scheduler_stats["cohort_fill_sum"]
+            / max(self.scheduler_stats["windows"], 1))
+        return s
+
+    def _record_window(self, now: float, fill: int, taus: List[int],
+                       **extra: int) -> None:
+        """Per-server-apply scheduler bookkeeping: cohort fill, staleness
+        spread, robust-admission actions.  Aggregates accumulate in
+        ``scheduler_stats``; the first ``_window_log_cap`` windows also
+        get a per-window record in ``window_log``."""
+        st = self.scheduler_stats
+        st["windows"] += 1
+        st["cohort_fill_sum"] += fill
+        st["cohort_fill_max"] = max(st["cohort_fill_max"], fill)
+        for key, val in extra.items():
+            st[key] = st.get(key, 0) + val
+        if len(self.window_log) < self._window_log_cap:
+            self.window_log.append({
+                "window": st["windows"], "time": float(now),
+                "fill": int(fill),
+                "tau_mean": float(np.mean(taus)) if taus else 0.0,
+                "tau_max": int(max(taus)) if taus else 0,
+                "dropouts": st["dropouts"],
+                "corrupted_rows": st["corrupted_rows"], **extra})
+
     def _flush(self) -> None:
         """Materialize every pending client update in one cohort call.
 
@@ -576,7 +671,12 @@ class FLRun:
         snapshot and the cohort call is exact.  Deltas are recorded as
         (DeltaBank, row) handles — the stacked buffer stays on device and a
         bank outlives its window for clients whose upload lands after the
-        next apply."""
+        next apply.
+
+        Adversarial clients (a ChurnModel with an adversarial population)
+        corrupt their rows HERE, right after the cohort computes them —
+        one on-device ``scale_rows`` pass over the bank, exactly where a
+        malicious client would hand the server a doctored delta."""
         if not self._pending:
             return
         stateful = self.strategy.stateful
@@ -584,10 +684,25 @@ class FLRun:
             self.state.params, [b for _, _, b, _ in self._pending],
             cstate_list=[c for _, _, _, c in self._pending]
             if stateful else None)
+        ids = [i for _, i, _, _ in self._pending]
+        factors = self.delays.corruption_factors(np.asarray(ids)) \
+            if hasattr(self.delays, "corruption_factors") else None
+        if factors is not None and bool(np.any(factors != 1.0)):
+            vec = np.ones(bank.capacity, np.float32)
+            vec[:len(ids)] = factors
+            if bank._stacked is not None or bank._rows is None:
+                bank._stacked = scale_rows(bank.stacked, vec)
+            else:
+                # per-event (vectorized=False) banks hold per-row trees
+                bank._rows = [
+                    jax.tree.map(lambda x: x * jnp.float32(f), r)
+                    for r, f in zip(bank._rows, vec[:len(bank._rows)])]
+            self.scheduler_stats["corrupted_rows"] += \
+                int(np.sum(factors != 1.0))
         for idx, (rid, _, _, _) in enumerate(self._pending):
             self._computed[rid] = (bank, idx)
         if stateful:
-            self._write_back([i for _, i, _, _ in self._pending], bank)
+            self._write_back(ids, bank)
         self._pending = []
 
     def _on_upload(self, now: float, rid: int, version: int, hist: History,
@@ -625,36 +740,81 @@ class FLRun:
 
     # -- event-driven core (immediate / buffered schedules) ----------------
 
+    def _heap_events(self):
+        """Per-event heap scheduler as an infinite event generator.
+
+        Yields ``(t, client, kind, dropped, t_up)`` with kind 0 = download
+        complete, 1 = upload complete.  Heap keys are ``(t, client, kind)``
+        — the documented deterministic total order on events (download
+        sorts before upload at equal time for the same client), identical
+        to the ``np.lexsort`` order :class:`repro.fl.scenario.EventStream`
+        emits, which is what makes the two sources bit-equal.  The old
+        insertion-``seq`` tie-break depended on *push* order, which no
+        vectorized scheduler can reproduce.
+
+        A dropped download (ChurnModel mid-round dropout: the client
+        vanishes after its download completes, before uploading) yields
+        with ``dropped=True`` and schedules the client's next download at
+        the time its upload *would* have finished — realized timelines are
+        drop-independent, so heap and device paths stay aligned.
+        """
+        heap: List[Tuple[float, int, int]] = []
+        for i in range(len(self.clients)):
+            heapq.heappush(heap,
+                           (self.delays.sample_download(i, 0.0), i, 0))
+        while True:
+            now, i, kind = heapq.heappop(heap)
+            if kind == 0:
+                dropped = self.delays.drops(i)
+                t_up = now + self.delays.sample_upload(i, now)
+                if dropped:
+                    heapq.heappush(
+                        heap,
+                        (t_up + self.delays.sample_download(i, t_up), i, 0))
+                else:
+                    heapq.heappush(heap, (t_up, i, 1))
+                yield now, i, 0, dropped, t_up
+            else:
+                heapq.heappush(
+                    heap,
+                    (now + self.delays.sample_download(i, now), i, 0))
+                yield now, i, 1, False, now
+
     def _run_events(self, max_rounds, eval_every, eval_fn,
                     record_active_every, max_time) -> History:
+        from repro.fl.scenario.sched import EventStream
         hist = History()
         n = len(self.clients)
-        heap: List = []
-        seq = 0
-        # download requests start at t=0
-        for i in range(n):
-            t_done = self.delays.sample_download(i)
-            heapq.heappush(heap, (t_done, seq, "down_done", i, None))
-            seq += 1
+        mode = self.scheduler
+        if mode == "auto":
+            # the Python heap wins at small n (no chunk overhead); past a
+            # few thousand clients the vectorized stream takes over
+            mode = "device" if n >= 4096 else "heap"
+        self.scheduler_stats["scheduler"] = mode
+        events = EventStream(self.delays).events() if mode == "device" \
+            else self._heap_events()
         now = 0.0
         next_active_t = 0.0
         busy_up = {i: None for i in range(n)}  # upload finish times
+        inflight: Dict[int, Tuple[int, int]] = {}  # client -> (rid, version)
         # (rid, client, batches, dispatch-ready cstate or None)
         self._pending: List[Tuple[int, int, Dict, object]] = []
         self._computed: Dict[int, Tuple] = {}   # rid -> (DeltaBank, row)
         self._t = int(self.state.t)             # host-side round mirror
         next_rid = 0
 
-        while self._t < max_rounds and heap:
-            now, _, kind, i, payload = heapq.heappop(heap)
-            if max_time is not None and now > max_time:
-                # the popped event lies PAST the budget: it must not run,
-                # and the clock stops AT the budget — end_time must never
+        for now_e, i, kind, dropped, t_up in events:
+            if self._t >= max_rounds:
+                break
+            if max_time is not None and now_e > max_time:
+                # this event lies PAST the budget: it must not run, and
+                # the clock stops AT the budget — end_time must never
                 # overshoot max_time or equal-simulated-time comparisons
                 # (experiments/sweeps/buffered_vs_immediate.py) would hand
                 # the overshooting run extra simulated seconds
                 now = max_time
                 break
+            now = now_e
             # record active ratio on a time grid: active = comp./uploading
             while next_active_t <= now:
                 up_now = sum(1 for v in busy_up.values()
@@ -662,25 +822,23 @@ class FLRun:
                 hist.active_times.append(next_active_t)
                 hist.active_ratio.append(up_now / n)
                 next_active_t += record_active_every
-            if kind == "down_done":
-                version = self._t
+            if kind == 0:                       # download complete
+                if dropped:
+                    # mid-round dropout: the client vanished before its
+                    # upload — no dispatch, no bank row, just a counter
+                    self.scheduler_stats["dropouts"] += 1
+                    continue
                 rid = next_rid
                 next_rid += 1
                 self._pending.append((rid, i, self._sample(i),
                                       self._cstate_for_dispatch(i)))
-                t_up = now + self.delays.sample_upload(i)
                 busy_up[i] = t_up
-                heapq.heappush(heap, (t_up, seq, "up_done", i,
-                                      (rid, version)))
-                seq += 1
-            elif kind == "up_done":
-                rid, version = payload
+                inflight[i] = (rid, self._t)
+            else:                               # upload complete
+                rid, version = inflight.pop(i)
                 self._on_upload(now, rid, version, hist, eval_fn,
                                 eval_every)
                 busy_up[i] = None
-                t_down = now + self.delays.sample_download(i)
-                heapq.heappush(heap, (t_down, seq, "down_done", i, None))
-                seq += 1
         # close out the active-ratio grid to the actual stop time: on a
         # max_time break the in-loop recording stopped at the last
         # *executed* event, leaving the grid short of the boundary
@@ -712,8 +870,8 @@ class FLRun:
             # the stacked pytree
             bank = self.engine.update_cohort(self.state.params, batches,
                                              cstate_list=cstates)
-            finish = [self.delays.sample_download(int(i))
-                      + self.delays.sample_upload(int(i)) for i in sel]
+            finish = [self.delays.sample_download(int(i), now)
+                      + self.delays.sample_upload(int(i), now) for i in sel]
             round_len = max(finish)
             # active-ratio grid: client i is busy until its own finish time
             while next_active_t <= now + round_len:

@@ -1,0 +1,27 @@
+"""Million-client scenario engine: device-resident event scheduling,
+trace-driven churn, and the declarative :class:`ScenarioSpec`.
+
+Three layers (see each module's docstring):
+
+  * :mod:`repro.fl.scenario.spec` — :class:`ScenarioSpec` /
+    :class:`Tier` / :class:`Diurnal` / :class:`Adversarial`: the
+    JSON-round-tripping declarative description of a traffic shape;
+  * :mod:`repro.fl.scenario.churn` — :class:`ChurnModel`, the
+    trace-driven :class:`repro.fl.DelayModel` (speed tiers, diurnal
+    availability, mid-round dropout, adversarial clients) built from a
+    spec;
+  * :mod:`repro.fl.scenario.sched` — :class:`EventStream` (the
+    host-vectorized float64 twin of FLRun's heap, bit-equal event order)
+    and :class:`DeviceScheduler` (the chunked-``lax.scan`` cohort former
+    for the 10^5–10^6-client regime; the ``scale`` bench row).
+
+Robust admission against the adversarial rows lives in
+:mod:`repro.core.server` (``robust_admission_weights`` /
+``bank_row_norms`` / ``mask_rows`` / ``scale_rows``) and is consumed by
+``buffered(m, robust=...)`` and ``DeltaRing(robust=...)``.
+"""
+from repro.fl.scenario.spec import (Adversarial, Diurnal,  # noqa: F401
+                                    ScenarioSpec, Tier)
+from repro.fl.scenario.churn import ChurnModel             # noqa: F401
+from repro.fl.scenario.sched import (DeviceScheduler,      # noqa: F401
+                                     EventStream, KIND_DOWN, KIND_UP)

@@ -65,7 +65,8 @@ from __future__ import annotations
 import warnings
 from typing import Dict, List, Optional, Tuple
 
-from repro.core import admission_weights, apply_admitted_rows
+from repro.core import (admission_weights, apply_admitted_rows,
+                        mask_rows, robust_flush_weights)
 from repro.core.quant import (QuantStack, QuantTree, dequantize_tree,
                               fp32_row_nbytes, quantize_tree)
 from repro.core.subset import SubsetSpec, merge_subset
@@ -87,13 +88,27 @@ class DeltaRing:
     def __init__(self, params0, *, windows: int = 4,
                  tau_max: Optional[int] = None,
                  user_cap: Optional[int] = None, subset=None,
-                 delta_dtype: str = "fp32"):
+                 delta_dtype: str = "fp32",
+                 robust: Optional[str] = None,
+                 clip_norm: Optional[float] = None,
+                 trim_frac: float = 0.1):
         if windows < 1:
             raise ValueError("need at least one retained window")
         if delta_dtype not in ("fp32", "int8"):
             raise ValueError(f"delta_dtype must be 'fp32' or 'int8', "
                              f"got {delta_dtype!r}")
+        if robust not in (None, "clip", "trim"):
+            raise ValueError(f"robust must be None, 'clip' or 'trim', "
+                             f"got {robust!r}")
         self.delta_dtype = delta_dtype
+        # Byzantine-robust window apply: "clip" bounds each admitted row's
+        # L2 norm, "trim" drops the norm tails of the window, both
+        # calibrated over the whole window's admissions (see
+        # repro.core.robust_flush_weights); either one also drops
+        # non-finite rows, so a NaN-bombing user cannot poison the window
+        self.robust = robust
+        self.clip_norm = clip_norm
+        self.trim_frac = trim_frac
         self.windows = windows
         # a straggler can only be recomputed against a retained snapshot,
         # so the EFFECTIVE staleness bound never exceeds the ring depth —
@@ -129,7 +144,9 @@ class DeltaRing:
         # user -> (window, bank, row): the user's latest served delta row
         self._by_user: Dict[object, Tuple[int, DeltaBank, int]] = {}
         self.stats = {"windows": 0, "admitted": 0, "stragglers": 0,
-                      "dropped": 0, "fairness_capped": 0}
+                      "dropped": 0, "fairness_capped": 0,
+                      "robust_clipped": 0, "robust_trimmed": 0,
+                      "robust_nonfinite": 0}
 
     # -- retention ---------------------------------------------------------
 
@@ -241,12 +258,32 @@ class DeltaRing:
             groups: Dict[int, Tuple[DeltaBank, List[Tuple[int, int]]]] = {}
             for bank, row, tau in self._pending:
                 groups.setdefault(id(bank), (bank, []))[1].append((row, tau))
-            for bank, rows in groups.values():
-                weights = admission_weights(
-                    bank.capacity, rows, beta=beta, count=m,
-                    damping=damping, tau_max=self.tau_max)
+            if self.robust is not None:
+                # one call for the whole window — the defense calibrates
+                # over every pending admission, current bank and straggler
+                # banks together (a lone straggler row would otherwise set
+                # its own clip median); row norms are reduced on device
+                # ([capacity] f32 is all that crosses to host)
+                per_bank, info = robust_flush_weights(
+                    groups, beta=beta, count=m, damping=damping,
+                    tau_max=self.tau_max, method=self.robust,
+                    clip_norm=self.clip_norm, trim_frac=self.trim_frac)
+                for key in ("clipped", "trimmed", "nonfinite"):
+                    self.stats[f"robust_{key}"] += info[key]
+            for key, (bank, rows) in groups.items():
+                if self.robust is not None:
+                    weights, keep = per_bank[key]
+                    # non-finite rows masked out of the stack so
+                    # 0-weights cannot leak NaNs (0×NaN=NaN)
+                    stack = bank.stacked if bool(keep.all()) \
+                        else mask_rows(bank.stacked, keep)
+                else:
+                    weights = admission_weights(
+                        bank.capacity, rows, beta=beta, count=m,
+                        damping=damping, tau_max=self.tau_max)
+                    stack = bank.stacked
                 state = apply_admitted_rows(
-                    state, bank.stacked, weights, len(rows),
+                    state, stack, weights, len(rows),
                     staleness_max=max(t for _, t in rows),
                     staleness_sum=float(sum(t for _, t in rows)))
         self._pending = []

@@ -120,6 +120,11 @@ class PersonalizationServer:
     delta_dtype : ``"fp32"`` (exact banking) or ``"int8"`` (quantized
                   banking with per-user error feedback; see the module
                   docstring)
+    robust      : Byzantine-robust window apply — ``None`` (plain),
+                  ``"clip"`` (per-row norm clipping) or ``"trim"``
+                  (norm-trimmed mean); forwarded to the ring together
+                  with ``clip_norm``/``trim_frac`` (see
+                  :func:`repro.core.robust_admission_weights`)
 
     Each mode's cohort engine is driven by the registry strategy
     ``repro.fl.api.strategy("personalize", mode=...)`` — the serving rules
@@ -131,7 +136,10 @@ class PersonalizationServer:
                  modes: Iterable[str] = MODES, windows: int = 4,
                  tau_max: Optional[int] = None, max_pending: int = 64,
                  head_cache: int = 4096, user_cap: Optional[int] = None,
-                 personal_subset=None, delta_dtype: str = "fp32"):
+                 personal_subset=None, delta_dtype: str = "fp32",
+                 robust: Optional[str] = None,
+                 clip_norm: Optional[float] = None,
+                 trim_frac: float = 0.1):
         self.pcfg = pcfg
         self.loss_fn = loss_fn
         self.state = init_server_state(_own_copy(init_params))
@@ -162,7 +170,8 @@ class PersonalizationServer:
         self.ring = DeltaRing(self.state.params, windows=windows,
                               tau_max=tau_max, user_cap=user_cap,
                               subset=self.personal_subset,
-                              delta_dtype=delta_dtype)
+                              delta_dtype=delta_dtype, robust=robust,
+                              clip_norm=clip_norm, trim_frac=trim_frac)
         if delta_dtype == "fp32":
             for eng in engines.values():
                 eng.add_bank_hook(self.ring.retain)   # bank handoff

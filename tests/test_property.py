@@ -231,3 +231,81 @@ def test_flash_attention_property_random_shapes(seed, s_mult):
     ref = attention_ref(q, k, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
                                rtol=1e-4)
+
+
+@st.composite
+def robust_case(draw):
+    """Random admission set: norms (some non-finite), rows, knobs."""
+    cap = draw(st.integers(2, 24))
+    k = draw(st.integers(1, cap))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.RandomState(seed)
+    norms = np.abs(rng.randn(cap)) * 10 ** rng.randint(-1, 3, cap)
+    bad = rng.rand(cap) < 0.2
+    norms[bad] = rng.choice([np.nan, np.inf], bad.sum())
+    idxs = rng.choice(cap, k, replace=False)
+    rows = [(int(i), int(rng.randint(0, 4))) for i in idxs]
+    beta = draw(st.floats(0.1, 2.0))
+    return cap, rows, norms, beta
+
+
+@SET
+@given(robust_case(), st.floats(0.0, 1.5))
+def test_robust_clip_weights_vs_oracle(case, damping):
+    """Clip == plain admission_weights with a per-row norm cap: every
+    weight equals β/count·(1+τ)^-a scaled by min(1, c/norm), zero on
+    non-finite rows, and keep mirrors finiteness."""
+    from repro.core import robust_admission_weights
+    cap, rows, norms, beta = case
+    w, keep, info = robust_admission_weights(
+        cap, rows, norms, beta=beta, count=len(rows), damping=damping,
+        method="clip")
+    np.testing.assert_array_equal(keep, np.isfinite(norms))
+    finite = [(i, t) for i, t in rows if np.isfinite(norms[i])]
+    assert info["nonfinite"] == len(rows) - len(finite)
+    oracle = np.zeros(cap)
+    if finite:
+        c = info["clip_norm"]
+        assert c == pytest.approx(
+            2.0 * np.median([norms[i] for i, _ in finite]))
+        for i, t in finite:
+            wt = beta / len(rows) * (1.0 + t) ** (-damping)
+            if norms[i] > c and norms[i] > 0.0:
+                wt *= c / norms[i]
+            oracle[i] += wt
+    np.testing.assert_allclose(w, oracle, rtol=1e-5, atol=1e-12)
+    # clipping never increases any admission's contribution norm
+    contrib = w * np.where(np.isfinite(norms), norms, 0.0)
+    if finite and info["clip_norm"] > 0:
+        assert contrib.max() <= beta / len(rows) * info["clip_norm"] \
+            * max((1.0 + t) ** (-damping) for _, t in finite) * (1 + 1e-6)
+
+
+@SET
+@given(robust_case(), st.floats(0.05, 0.45))
+def test_robust_trim_weights_vs_oracle(case, trim_frac):
+    """Trim == numpy trimmed mean over the finite admissions: the norm
+    tails get weight 0, survivors split β evenly, ≥1 survives."""
+    from repro.core import robust_admission_weights
+    cap, rows, norms, beta = case
+    w, keep, info = robust_admission_weights(
+        cap, rows, norms, beta=beta, count=len(rows), method="trim",
+        trim_frac=trim_frac)
+    finite = [(i, t) for i, t in rows if np.isfinite(norms[i])]
+    if not finite:
+        assert not w.any()
+        return
+    k = len(finite)
+    cut = int(np.ceil(trim_frac * k))
+    if 2 * cut >= k:
+        cut = (k - 1) // 2
+    order = np.argsort([norms[i] for i, _ in finite], kind="stable")
+    survivors = [finite[j][0] for j in order[cut: k - cut]]
+    assert len(survivors) >= 1
+    assert info["trimmed"] == k - len(survivors)
+    oracle = np.zeros(cap)
+    for i in survivors:
+        oracle[i] += beta / len(survivors)
+    np.testing.assert_allclose(w, oracle, rtol=1e-6, atol=1e-12)
+    # total admitted mass is exactly β (a trimmed MEAN, not a down-scale)
+    assert w.sum() == pytest.approx(beta, rel=1e-5)

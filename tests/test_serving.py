@@ -314,7 +314,9 @@ def test_ring_admit_row_reports_cause():
     assert ring.admit("c", bank, 0, 1) is True
     assert ring.admit("c", bank, 0, 1) is False
     assert ring.stats == {"windows": 0, "admitted": 2, "stragglers": 1,
-                          "dropped": 1, "fairness_capped": 2}
+                          "dropped": 1, "fairness_capped": 2,
+                          "robust_clipped": 0, "robust_trimmed": 0,
+                          "robust_nonfinite": 0}
 
 
 def test_fairness_cap_ring_is_admission_authority():
