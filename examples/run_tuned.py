@@ -1,0 +1,70 @@
+"""Replay the tuner's promoted winners: load
+``examples/tuned/fig2_winners.json`` (written by
+``experiments/sweeps/joint_tune.py`` via
+:func:`repro.tune.promote_winners`) and re-run each winning
+(strategy, schedule) configuration as a plain :class:`repro.fl.FLRun` —
+no tuner in the loop, just the config record the sweep selected.
+
+This is the promotion contract end-to-end: a winner is an ordinary JSON
+blob (strategy name + kwargs, schedule spelling, seed), so anything that
+can parse JSON can reproduce the tuned run.
+
+    PYTHONPATH=src python examples/run_tuned.py
+
+(Set EXAMPLES_SMOKE=1 to shrink rounds/clients for CI.)
+"""
+import json
+import os
+
+import jax
+
+from repro.configs.paper_models import CIFAR_CNN, MNIST_CNN
+from repro.core import PersAFLConfig
+from repro.data import make_federated_dataset
+from repro.fl import DelayModel, FLRun, make_personalized_eval, strategy
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+from repro.tune import parse_schedule
+
+SMOKE = bool(int(os.environ.get("EXAMPLES_SMOKE", "0")))
+WINNERS = os.path.join(os.path.dirname(__file__), "tuned",
+                       "fig2_winners.json")
+
+
+def _setup(kind):
+    cpc = 5 if kind == "mnist" else 3  # paper §5 class splits
+    ccfg = MNIST_CNN if kind == "mnist" else CIFAR_CNN
+    clients = make_federated_dataset(kind, n_clients=6 if SMOKE else 20,
+                                     classes_per_client=cpc, seed=0)
+    params = init_cnn(ccfg, jax.random.PRNGKey(0))
+    loss = lambda p, b: cnn_loss(ccfg, p, b, train=False)      # noqa: E731
+    acc = lambda p, b: cnn_accuracy(ccfg, p, b)                # noqa: E731
+    ev = make_personalized_eval(loss, acc, clients, ft_steps=1, ft_lr=0.01)
+    return clients, params, loss, ev
+
+
+def main():
+    blob = json.load(open(WINNERS))
+    rounds = 12 if SMOKE else 96
+    print("dataset,winner,schedule,rounds,final_acc,tuned_acc")
+    for group, win in sorted(blob["winners"].items()):
+        if not group.endswith("/selfstop"):
+            continue
+        kind = group.split("/")[0]
+        clients, params, loss, ev = _setup(kind)
+        pcfg = PersAFLConfig(option="A", q_local=5, eta=0.002, alpha=0.01,
+                             lam=25.0, inner_steps=5, inner_eta=0.02)
+        run = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                    pcfg=pcfg,
+                    delays=DelayModel(len(clients), seed=win["seed"]),
+                    strategy=strategy(win["strategy"],
+                                      **win["strategy_kwargs"]),
+                    schedule=parse_schedule(win["schedule"]),
+                    batch_size=16, seed=win["seed"])
+        h = run.run(max_rounds=rounds, eval_every=rounds, eval_fn=ev,
+                    final_eval=True)
+        print(f"{kind},{win['strategy']},{win['schedule']},{rounds},"
+              f"{h.acc[-1]:.3f},{win['final_acc']:.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

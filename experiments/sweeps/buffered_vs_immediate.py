@@ -10,102 +10,121 @@ simulated communication — the FedBuff-style trade: fewer, fatter server
 rounds (higher cohort occupancy, zero per-delta host traffic) against the
 staleness each delta accumulates while the buffer fills.
 
+Since PR 9 the sweep rides :class:`repro.tune.TuneRunner`: each row is a
+fingerprinted :class:`repro.tune.Arm` journaled to
+``buffered_vs_immediate_journal.jsonl`` (re-running skips completed rows),
+and final accuracy is read through ``FLRun.run(final_eval=True)`` — the
+end-of-budget eval — rather than the last *grid* eval, which could be
+stale (or absent entirely when ``eval_every`` exceeds the rounds a budget
+admits; regression-pinned in ``tests/test_tune.py``).
+
 Emits one JSON row per configuration to
 ``experiments/sweeps/buffered_vs_immediate.json`` and CSV lines to stdout.
 
     PYTHONPATH=src python experiments/sweeps/buffered_vs_immediate.py
 
-Env: SWEEP_FAST=1 shrinks clients/rounds for a smoke pass.
+Env: SWEEP_FAST=1 shrinks clients/rounds for a smoke pass;
+SWEEP_FRESH=1 deletes the journal first.
 """
 from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
-import numpy as np
 
 from repro.configs.paper_models import CIFAR_CNN, MNIST_CNN
 from repro.core import PersAFLConfig
 from repro.data import make_federated_dataset
-from repro.fl import DelayModel, FLRun, buffered, immediate, \
-    make_personalized_eval, strategy
+from repro.fl import make_personalized_eval
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+from repro.tune import Arm, TuneRunner
 
 FAST = bool(int(os.environ.get("SWEEP_FAST", "0")))
 OUT = os.path.join("experiments", "sweeps")
+JOURNAL = os.path.join(OUT, "buffered_vs_immediate_journal.jsonl")
 
 
-def _setup(kind: str, seed: int = 0):
-    # fig2b/2c setup (paper §5): c=5 classes/client MNIST, c=3 CIFAR
-    cpc = 5 if kind == "mnist" else 3
-    ccfg = MNIST_CNN if kind == "mnist" else CIFAR_CNN
-    n = 10 if FAST else 30
-    clients = make_federated_dataset(kind, n_clients=n,
-                                     classes_per_client=cpc, seed=seed)
-    params = init_cnn(ccfg, jax.random.PRNGKey(seed))
-    loss = lambda p, b: cnn_loss(ccfg, p, b, train=False)      # noqa: E731
-    acc = lambda p, b: cnn_accuracy(ccfg, p, b)                # noqa: E731
-    ev = make_personalized_eval(loss, acc, clients, ft_steps=1, ft_lr=0.01)
-    return clients, params, loss, ev
+def _problem(kind: str, seed: int = 0):
+    """Problem closure per dataset (fig2b/2c setup, paper §5: c=5
+    classes/client MNIST, c=3 CIFAR) — built lazily so resumed rows cost
+    nothing, then shared by every arm of the (dataset, option) grids."""
+    cache = {}
+
+    def build(arm):
+        if not cache:
+            cpc = 5 if kind == "mnist" else 3
+            ccfg = MNIST_CNN if kind == "mnist" else CIFAR_CNN
+            n = 10 if FAST else 30
+            clients = make_federated_dataset(kind, n_clients=n,
+                                             classes_per_client=cpc,
+                                             seed=seed)
+            params = init_cnn(ccfg, jax.random.PRNGKey(seed))
+            loss = lambda p, b: cnn_loss(ccfg, p, b, train=False)  # noqa
+            acc = lambda p, b: cnn_accuracy(ccfg, p, b)            # noqa
+            rounds = 24 if FAST else 160
+            cache.update(
+                clients=clients, loss_fn=loss, init_params=params,
+                eval_fn=make_personalized_eval(loss, acc, clients,
+                                               ft_steps=1, ft_lr=0.01,
+                                               with_loss=True),
+                pcfg=PersAFLConfig(option="A", q_local=5 if FAST else 10,
+                                   eta=0.002, lam=25.0,
+                                   inner_steps=5 if FAST else 10,
+                                   inner_eta=0.02),
+                batch_size=16, eval_every=max(rounds // 4, 1))
+        return cache
+
+    return build
 
 
-def _run(kind, option, schedule, *, max_rounds, eval_every, max_time=None,
-         seed=0):
-    clients, params, loss, ev = _setup(kind, seed)
-    pcfg = PersAFLConfig(option=option, q_local=5 if FAST else 10,
-                         eta=0.002, lam=25.0,
-                         inner_steps=5 if FAST else 10, inner_eta=0.02)
-    run = FLRun(clients=clients, loss_fn=loss, init_params=params,
-                pcfg=pcfg, delays=DelayModel(len(clients), seed=seed),
-                strategy=strategy("persafl", option=option),
-                schedule=schedule, batch_size=16, seed=seed)
-    t0 = time.time()
-    hist = run.run(max_rounds=max_rounds, eval_every=eval_every,
-                   eval_fn=ev, max_time=max_time)
-    wall = time.time() - t0
-    sim_time = hist.end_time        # the loop's true stop time, not the
-    rounds_done = int(run.final_stats["server_rounds"])  # 5s-grid quantum
+def _row(kind, option, name, budget, t):
     return {
-        "rounds_done": rounds_done,
-        "sim_time": sim_time,
-        "final_acc": hist.acc[-1] if hist.acc else float("nan"),
-        "staleness_mean": float(np.mean(hist.staleness))
-        if hist.staleness else 0.0,
-        "staleness_max": int(max(hist.staleness)) if hist.staleness else 0,
+        "dataset": kind, "option": option, "schedule": name,
+        "sim_time_budget": budget,
+        "rounds_done": t.rounds,
+        "sim_time": t.sim_time,
+        "final_acc": t.final_acc,
+        "staleness_mean": t.staleness_mean,
+        "staleness_max": t.staleness_max,
         # server rounds per unit simulated time: the throughput axis of
         # the trade (buffered flushes advance t by M at once)
-        "rounds_per_sim_s": rounds_done / max(sim_time, 1e-9),
-        "host_materializations":
-            int(run.engine.stats["host_materializations"]),
-        "wall_s": wall,
+        "rounds_per_sim_s": t.rounds / max(t.sim_time, 1e-9),
+        "host_materializations": t.host_materializations,
+        "wall_s": t.wall_s,
     }
 
 
 def main():
+    if bool(int(os.environ.get("SWEEP_FRESH", "0"))) \
+            and os.path.exists(JOURNAL):
+        os.remove(JOURNAL)
     rounds = 24 if FAST else 160
     rows = []
     print("sweep,dataset,option,schedule,rounds_done,final_acc,"
           "tau_mean,tau_max,rounds_per_sim_s,host_mat")
-    ev_every = max(rounds // 4, 1)
     for kind in ("mnist", "cifar"):
+        runner = TuneRunner(_problem(kind), journal=JOURNAL)
         for option in ("A", "C"):
-            base = _run(kind, option, immediate(), max_rounds=rounds,
-                        eval_every=ev_every)
-            budget = base["sim_time"]
+            def arm(schedule, **kw):
+                return Arm(strategy="persafl",
+                           strategy_kwargs={"option": option},
+                           schedule=schedule, pcfg={"option": option},
+                           seed=0, group=f"{kind}/{option}", **kw)
+
+            base = runner.run_arm(arm("immediate", max_rounds=rounds))
+            budget = base.sim_time
             variants = [("immediate", base)]
             for m in (4, 8):
                 # equal simulated time: cap by the immediate run's budget,
                 # generous round cap so time (not rounds) is the binding
                 # constraint; eval cadence matches the immediate run's
-                variants.append((f"buffered({m})", _run(
-                    kind, option, buffered(m), max_rounds=8 * rounds,
-                    eval_every=ev_every, max_time=budget)))
-            for name, r in variants:
-                row = {"dataset": kind, "option": option,
-                       "schedule": name, "sim_time_budget": budget, **r}
-                rows.append(row)
+                variants.append((f"buffered({m})", runner.run_arm(
+                    arm(f"buffered({m})", max_rounds=8 * rounds,
+                        budget=budget))))
+            for name, t in variants:
+                r = _row(kind, option, name, budget, t)
+                rows.append(r)
                 print(f"sweep,{kind},{option},{name},{r['rounds_done']},"
                       f"{r['final_acc']:.3f},{r['staleness_mean']:.2f},"
                       f"{r['staleness_max']},{r['rounds_per_sim_s']:.3f},"

@@ -23,31 +23,39 @@ direction flip is norm-indistinguishable from an honest row — defending
 that class needs direction-aware aggregation (geometric median / Krum),
 which is out of scope for the admission-weight layer.
 
+Since PR 9 the arms ride :class:`repro.tune.TuneRunner` (no stop rule —
+the pinned accuracy bands need full-budget runs): each arm is a
+fingerprinted :class:`repro.tune.Arm` carrying its
+:class:`~repro.fl.ScenarioSpec`, journaled to
+``churn_robustness_journal.jsonl`` so a killed sweep resumes by
+fingerprint skip.
+
 Emits one JSON row per arm to
 ``experiments/sweeps/churn_robustness.json`` and CSV lines to stdout.
 
     PYTHONPATH=src python experiments/sweeps/churn_robustness.py
 
-Env: SWEEP_FAST=1 shrinks clients/rounds for a smoke pass.
+Env: SWEEP_FAST=1 shrinks clients/rounds for a smoke pass;
+SWEEP_FRESH=1 deletes the journal first.
 """
 from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
-import numpy as np
 
 from repro.configs.paper_models import MNIST_CNN
 from repro.core import PersAFLConfig
 from repro.data import make_federated_dataset
-from repro.fl import (Adversarial, Diurnal, FLRun, ScenarioSpec, Tier,
-                      buffered, make_personalized_eval, strategy)
+from repro.fl import Adversarial, Diurnal, ScenarioSpec, Tier, \
+    make_personalized_eval
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+from repro.tune import Arm, TuneRunner
 
 FAST = bool(int(os.environ.get("SWEEP_FAST", "0")))
 OUT = os.path.join("experiments", "sweeps")
+JOURNAL = os.path.join(OUT, "churn_robustness_journal.jsonl")
 
 ADV_FRAC = 0.05
 MAGNITUDE = 50.0
@@ -69,67 +77,76 @@ def _spec(n, *, adversarial):
         if adversarial else None)
 
 
-def _setup(seed=0):
-    n = 10 if FAST else 30
-    clients = make_federated_dataset("mnist", n_clients=n,
-                                     classes_per_client=5, seed=seed)
-    params = init_cnn(MNIST_CNN, jax.random.PRNGKey(seed))
-    loss = lambda p, b: cnn_loss(MNIST_CNN, p, b, train=False)  # noqa: E731
-    acc = lambda p, b: cnn_accuracy(MNIST_CNN, p, b)            # noqa: E731
-    ev = make_personalized_eval(loss, acc, clients, ft_steps=1, ft_lr=0.01)
-    return clients, params, loss, ev
+def _problem(seed=0):
+    cache = {}
+
+    def build(arm):
+        if not cache:
+            n = 10 if FAST else 30
+            clients = make_federated_dataset("mnist", n_clients=n,
+                                             classes_per_client=5,
+                                             seed=seed)
+            params = init_cnn(MNIST_CNN, jax.random.PRNGKey(seed))
+            loss = lambda p, b: cnn_loss(MNIST_CNN, p, b,        # noqa
+                                         train=False)
+            acc = lambda p, b: cnn_accuracy(MNIST_CNN, p, b)     # noqa
+            rounds = 24 if FAST else 160
+            cache.update(
+                clients=clients, loss_fn=loss, init_params=params,
+                eval_fn=make_personalized_eval(loss, acc, clients,
+                                               ft_steps=1, ft_lr=0.01,
+                                               with_loss=True),
+                pcfg=PersAFLConfig(option="A", q_local=5 if FAST else 10,
+                                   eta=0.002, lam=25.0,
+                                   inner_steps=5 if FAST else 10,
+                                   inner_eta=0.02),
+                batch_size=16, eval_every=max(rounds // 4, 1))
+        return cache
+
+    return build
 
 
-def _run(arm, schedule, *, adversarial, max_rounds, eval_every, seed=0):
-    clients, params, loss, ev = _setup(seed)
-    pcfg = PersAFLConfig(option="A", q_local=5 if FAST else 10,
-                         eta=0.002, lam=25.0,
-                         inner_steps=5 if FAST else 10, inner_eta=0.02)
-    spec = _spec(len(clients), adversarial=adversarial)
-    run = FLRun(clients=clients, loss_fn=loss, init_params=params,
-                pcfg=pcfg, delays=spec.build(),
-                strategy=strategy("persafl", option="A"),
-                schedule=schedule, batch_size=16, seed=seed)
-    t0 = time.time()
-    hist = run.run(max_rounds=max_rounds, eval_every=eval_every, eval_fn=ev)
-    wall = time.time() - t0
-    s = run.stats
-    finite = all(np.isfinite(np.asarray(x)).all()
-                 for x in jax.tree.leaves(run.state.params))
+def _row(name, t):
     return {
-        "arm": arm,
-        "final_acc": hist.acc[-1] if hist.acc else float("nan"),
-        "params_finite": finite,
-        "staleness_mean": float(np.mean(hist.staleness))
-        if hist.staleness else 0.0,
-        "dropouts": s["dropouts"],
-        "corrupted_rows": s["corrupted_rows"],
-        "robust_clipped": s["robust_clipped"],
-        "robust_trimmed": s["robust_trimmed"],
-        "robust_nonfinite": s["robust_nonfinite"],
-        "mean_cohort_fill": s["mean_cohort_fill"],
-        "host_materializations": int(s["host_materializations"]),
-        "wall_s": wall,
+        "arm": name,
+        "final_acc": t.final_acc,
+        "params_finite": t.params_finite,
+        "staleness_mean": t.staleness_mean,
+        "dropouts": t.stats["dropouts"],
+        "corrupted_rows": t.stats["corrupted_rows"],
+        "robust_clipped": t.stats["robust_clipped"],
+        "robust_trimmed": t.stats["robust_trimmed"],
+        "robust_nonfinite": t.stats["robust_nonfinite"],
+        "mean_cohort_fill": t.stats["mean_cohort_fill"],
+        "host_materializations": t.host_materializations,
+        "wall_s": t.wall_s,
     }
 
 
 def main():
+    if bool(int(os.environ.get("SWEEP_FRESH", "0"))) \
+            and os.path.exists(JOURNAL):
+        os.remove(JOURNAL)
     rounds = 24 if FAST else 160
-    ev_every = max(rounds // 4, 1)
+    n = 10 if FAST else 30
     arms = [
-        ("clean", buffered(8), False),
-        ("plain", buffered(8), True),
-        ("clip", buffered(8, robust="clip"), True),
-        ("trim", buffered(8, robust="trim", trim_frac=0.2), True),
+        ("clean", "buffered(8)", False),
+        ("plain", "buffered(8)", True),
+        ("clip", "buffered(8, robust=clip)", True),
+        ("trim", "buffered(8, robust=trim, trim_frac=0.2)", True),
     ]
-    rows = []
+    runner = TuneRunner(_problem(), journal=JOURNAL)  # no stop rule:
+    rows = []                    # the accuracy bands need full budgets
     print("sweep,arm,final_acc,corrupted,clipped,trimmed,dropouts,"
           "host_mat")
-    for arm, schedule, adversarial in arms:
-        r = _run(arm, schedule, adversarial=adversarial,
-                 max_rounds=rounds, eval_every=ev_every)
+    for name, schedule, adversarial in arms:
+        t = runner.run_arm(Arm(
+            strategy="persafl", strategy_kwargs={"option": "A"},
+            schedule=schedule, scenario=_spec(n, adversarial=adversarial),
+            seed=0, max_rounds=rounds, group=f"churn/{name}"))
+        r = _row(name, t)
         rows.append(r)
-        print(f"sweep,{arm},{r['final_acc']:.3f},{r['corrupted_rows']},"
+        print(f"sweep,{name},{r['final_acc']:.3f},{r['corrupted_rows']},"
               f"{r['robust_clipped']},{r['robust_trimmed']},"
               f"{r['dropouts']},{r['host_materializations']}", flush=True)
     by = {r["arm"]: r for r in rows}

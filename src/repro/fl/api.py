@@ -62,10 +62,19 @@ from repro.fl.engine import CohortEngine, DeltaBank
 class History:
     """Run trace shared by every schedule: accuracy-vs-simulated-time,
     active-client ratio on a time grid (paper Figure 2a), and per-applied-
-    update staleness (Assumption 1 bookkeeping; empty for sync rounds)."""
+    update staleness (Assumption 1 bookkeeping; empty for sync rounds).
+
+    ``loss`` is recorded alongside ``acc`` whenever the run's ``eval_fn``
+    reports one (a ``(acc, loss)`` pair or an ``{"acc":, "loss":}`` dict —
+    scalar returns stay acc-only, so pre-existing eval functions keep
+    their exact behavior).  When present it is parallel to ``times`` /
+    ``rounds`` / ``acc``; the :mod:`repro.tune` stop rules read it live
+    through the ``on_eval`` callback.
+    """
     times: List[float] = dataclasses.field(default_factory=list)
     rounds: List[int] = dataclasses.field(default_factory=list)
     acc: List[float] = dataclasses.field(default_factory=list)
+    loss: List[float] = dataclasses.field(default_factory=list)
     active_times: List[float] = dataclasses.field(default_factory=list)
     active_ratio: List[float] = dataclasses.field(default_factory=list)
     staleness: List[int] = dataclasses.field(default_factory=list)
@@ -78,6 +87,24 @@ class History:
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
+
+
+def _normalize_eval(result) -> Tuple[float, Optional[float]]:
+    """Normalize an ``eval_fn`` return to ``(acc, loss-or-None)``.
+
+    Accepted spellings: a bare scalar (accuracy only — the historical
+    contract), a 2-sequence ``(acc, loss)``, or a dict with ``"acc"`` and
+    an optional ``"loss"``.
+    """
+    if isinstance(result, dict):
+        loss = result.get("loss")
+        return float(result["acc"]), None if loss is None else float(loss)
+    if isinstance(result, (tuple, list)):
+        if len(result) != 2:
+            raise ValueError(f"eval_fn returned a {len(result)}-sequence; "
+                             f"expected (acc, loss)")
+        return float(result[0]), float(result[1])
+    return float(result), None
 
 
 def _own_copy(params):
@@ -391,9 +418,7 @@ class Immediate(ApplyPolicy):
         run._record_window(now, 1, [staleness])
         run._t += 1
         if eval_fn is not None and run._t % eval_every == 0:
-            hist.times.append(now)
-            hist.rounds.append(run._t)
-            hist.acc.append(float(eval_fn(run.state.params)))
+            run._record_eval(hist, now, eval_fn, run._t)
 
 
 class Buffered(ApplyPolicy):
@@ -491,9 +516,7 @@ class Buffered(ApplyPolicy):
         # is crossed (the immediate-apply modulo test would skip most)
         if eval_fn is not None \
                 and run._t // eval_every > t_old // eval_every:
-            hist.times.append(now)
-            hist.rounds.append(run._t)
-            hist.acc.append(float(eval_fn(run.state.params)))
+            run._record_eval(hist, now, eval_fn, run._t)
 
 
 class SyncBarrier(ApplyPolicy):
@@ -589,6 +612,8 @@ class FLRun:
                                    cohort_impl=cohort_impl,
                                    strategy=self.strategy)
         self._cstates: List = [None] * len(clients)
+        self._on_eval: Optional[Callable] = None
+        self._stop = False
         self.final_stats: Optional[Dict] = None
         # per-window scheduler observability (see _record_window)
         self.scheduler_stats: Dict = {
@@ -710,6 +735,26 @@ class FLRun:
         self.schedule.on_upload(self, now, rid, version, hist, eval_fn,
                                 eval_every)
 
+    def _record_eval(self, hist: History, now: float, eval_fn,
+                     t: int, notify: bool = True) -> None:
+        """Run one evaluation and append it to the History (acc, and loss
+        when the eval_fn reports one — see :func:`_normalize_eval`).
+
+        With ``notify=True`` the run's ``on_eval`` callback (if any) sees
+        the updated History; a ``"stop"`` return raises the stop flag the
+        event/round loops check after every server apply — the clean
+        mid-run abort path the :mod:`repro.tune` runner halts arms with.
+        """
+        acc, loss = _normalize_eval(eval_fn(self.state.params))
+        hist.times.append(now)
+        hist.rounds.append(int(t))
+        hist.acc.append(acc)
+        if loss is not None:
+            hist.loss.append(loss)
+        if notify and self._on_eval is not None \
+                and self._on_eval(hist) == "stop":
+            self._stop = True
+
     # -- the run surface ---------------------------------------------------
 
     def run(self, *, max_rounds: Optional[int] = None,
@@ -717,16 +762,34 @@ class FLRun:
             eval_every: Optional[int] = None,
             eval_fn: Optional[Callable] = None,
             record_active_every: float = 5.0,
-            max_time: Optional[float] = None) -> History:
+            max_time: Optional[float] = None,
+            on_eval: Optional[Callable[[History], Optional[str]]] = None,
+            final_eval: bool = False) -> History:
         """Drive the run to ``max_rounds`` server rounds (or ``max_time``
         simulated seconds, whichever first).  ``max_server_rounds`` is an
-        accepted alias.  Returns the :class:`History`."""
+        accepted alias.  Returns the :class:`History`.
+
+        ``on_eval(hist)`` is called after every recorded evaluation with
+        the live History; returning ``"stop"`` halts the event loop
+        cleanly after the current server apply (History stays well-formed:
+        the active-ratio grid is closed out and ``end_time`` is the true
+        stop time).  This is the abort path self-stopping sweeps
+        (:mod:`repro.tune`) kill diverging or plateaued arms through.
+
+        ``final_eval=True`` forces one evaluation at the actual stop time
+        if the last recorded one is stale (or none was recorded at all) —
+        "final accuracy" reads (``hist.acc[-1]``) are then never a stale
+        grid point, even when ``eval_every`` exceeds the round count or a
+        ``max_time`` budget bites between grid points.
+        """
         if max_rounds is None:
             max_rounds = max_server_rounds
         if max_rounds is None:
             raise TypeError("run() needs max_rounds=")
         if eval_every is None:
             eval_every = self.schedule.default_eval_every
+        self._on_eval = on_eval
+        self._stop = False
         self.schedule.start(self)
         if self.schedule.kind == "round":
             hist = self._run_rounds(max_rounds, eval_every, eval_fn,
@@ -734,6 +797,16 @@ class FLRun:
         else:
             hist = self._run_events(max_rounds, eval_every, eval_fn,
                                     record_active_every, max_time)
+        if final_eval and eval_fn is not None:
+            t_now = int(np.asarray(self.state.t))
+            # params only move with the round counter: a last eval at the
+            # current t already IS the end-time accuracy, re-running it
+            # would burn an eval to recompute an identical value
+            if not hist.rounds or hist.rounds[-1] != t_now:
+                # the forced final eval never re-enters on_eval: the run
+                # is already over, a "stop" could not mean anything
+                self._record_eval(hist, hist.end_time, eval_fn, t_now,
+                                  notify=False)
         self.final_stats = jax.tree.map(np.asarray,
                                         staleness_stats(self.state))
         return hist
@@ -839,6 +912,11 @@ class FLRun:
                 self._on_upload(now, rid, version, hist, eval_fn,
                                 eval_every)
                 busy_up[i] = None
+                if self._stop:
+                    # on_eval requested a stop: halt cleanly after this
+                    # apply — the grid closeout below and end_time keep
+                    # the History well-formed
+                    break
         # close out the active-ratio grid to the actual stop time: on a
         # max_time break the in-loop recording stopped at the last
         # *executed* event, leaving the grid short of the boundary
@@ -891,10 +969,8 @@ class FLRun:
                                              staleness_sum=0.0)
             self._write_back([int(i) for i in sel], bank)
             if eval_fn is not None and (rnd + 1) % eval_every == 0:
-                hist.times.append(now)
-                hist.rounds.append(rnd + 1)
-                hist.acc.append(float(eval_fn(self.state.params)))
-            if max_time is not None and now >= max_time:
+                self._record_eval(hist, now, eval_fn, rnd + 1)
+            if self._stop or (max_time is not None and now >= max_time):
                 break
         hist.end_time = now
         return hist

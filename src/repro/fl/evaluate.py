@@ -22,7 +22,8 @@ def make_personalized_eval(loss_fn: Callable, acc_fn: Callable,
                            clients: List[ClientData], *, ft_steps: int = 1,
                            ft_lr: float = 0.01, batch_size: int = 32,
                            eval_size: int = 64, seed: int = 0,
-                           personal_subset=None) -> Callable:
+                           personal_subset=None,
+                           with_loss: bool = False) -> Callable:
     """Returns eval(params) -> mean personalized test accuracy.
 
     All shapes are fixed (batched fine-tune across clients via vmap) so the
@@ -30,8 +31,19 @@ def make_personalized_eval(loss_fn: Callable, acc_fn: Callable,
     With ``personal_subset`` (any SubsetSpec spelling) only the personal
     leaves take fine-tune steps — the masked update is a trace-time Python
     branch per leaf, so the jit cost is identical.
+
+    ``with_loss=True`` returns ``{"acc": ..., "loss": ...}`` instead of a
+    bare float — the mean personalized *test loss* rides the same two
+    jitted calls, and :class:`repro.fl.FLRun` records it in
+    ``History.loss`` (the series the :mod:`repro.tune` early-stop rules
+    watch).  The default stays the scalar contract existing callers and
+    pinned sweep numbers rely on.
+
+    The returned ``evaluate`` is a pure function of ``params``: the
+    fine-tune batches are drawn fresh from ``seed`` on every call, so
+    one eval_fn can be shared across many runs (the tuner's grids) with
+    no cross-run order dependence.
     """
-    rng = np.random.RandomState(seed)
     n = len(clients)
     spec = SubsetSpec.resolve(personal_subset)
     test = jax.tree.map(lambda *xs: np.stack(xs),
@@ -48,20 +60,34 @@ def make_personalized_eval(loss_fn: Callable, acc_fn: Callable,
                 lambda p, gg, m: (p.astype(jnp.float32)
                                   - ft_lr * gg.astype(jnp.float32))
                 .astype(p.dtype) if m else p, p_i, g, mask)
+        if with_loss:
+            return acc_fn(p_i, test_b), loss_fn(p_i, test_b)
         return acc_fn(p_i, test_b)
 
     _batched = jax.jit(jax.vmap(_personalize_and_score, in_axes=(None, 0, 0)))
 
-    def evaluate(params) -> float:
+    def evaluate(params):
         if spec is not None:
             spec.validate(params)   # typo'd subsets fail loudly, not as
             #                         an accidental zero-step fine-tune
+        # the fine-tune probe is deterministic: the same batches on every
+        # call, so evaluate(params) is a pure function of params.  (It
+        # used to advance a closure RNG per call, which made a shared
+        # eval_fn order-dependent — two identical FLRuns scored
+        # differently depending on how many evals ran before them, and
+        # paired tuner trials could disagree on their common prefix.)
+        rng = np.random.RandomState(seed)
         per_client = []
         for c in clients:
             idx = rng.randint(0, c.n_train, (ft_steps, batch_size))
             per_client.append({"images": c.train_x[idx],
                                "labels": c.train_y[idx]})
         ft = jax.tree.map(lambda *xs: np.stack(xs), *per_client)
-        return float(np.mean(np.asarray(_batched(params, ft, test))))
+        out = _batched(params, ft, test)
+        if with_loss:
+            acc_v, loss_v = out
+            return {"acc": float(np.mean(np.asarray(acc_v))),
+                    "loss": float(np.mean(np.asarray(loss_v)))}
+        return float(np.mean(np.asarray(out)))
 
     return evaluate

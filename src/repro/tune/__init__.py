@@ -1,0 +1,17 @@
+"""`repro.tune` — the self-stopping tuner subsystem.
+
+Declarative sweeps (:class:`SweepSpec` → fingerprinted :class:`Arm`\\ s,
+successive-halving ``hillclimb``), pure early-stop rules evaluated on the
+live :class:`repro.fl.History` trace, a resumable journaled arm executor
+(:class:`TuneRunner`) driving ``FLRun.run(on_eval=...)``, and the
+fig2-style report.  See ``experiments/sweeps/joint_tune.py`` for the
+end-to-end driver and ``experiments/README.md`` for the surface tour.
+"""
+from repro.tune.space import (Arm, SweepSpec, parse_schedule,  # noqa: F401
+                              promote, rung_arms)
+from repro.tune.stop import (AccPlateau, AnyOf, LossSpike,     # noqa: F401
+                             MedianLoss, StopRule, default_rules,
+                             rule_from_dict, rule_to_dict)
+from repro.tune.runner import Trial, TuneRunner, trial_key     # noqa: F401
+from repro.tune.report import (make_report, promote_winners,   # noqa: F401
+                               to_markdown)
