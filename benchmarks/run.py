@@ -274,6 +274,7 @@ def engine_sharded():
     from repro.core import PersAFLConfig
     from repro.fl import CohortEngine
 
+    t_bench0 = time.time()
     d, cohort = 32, 32
     rng = np.random.RandomState(0)
 
@@ -315,11 +316,15 @@ def engine_sharded():
     equal = diff <= 1e-5
     print(f"engine_sharded,{walls['shard_map'] * 1e6:.0f},"
           f"max_abs_diff={diff:.2e},equal={equal}", flush=True)
-    _save("engine_sharded", {"wall_vmap_s": walls["vmap"],
-                             "wall_shard_map_s": walls["shard_map"],
-                             "devices": jax.device_count(),
-                             "cohort": cohort, "max_abs_diff": diff,
-                             "equal_atol_1e-5": equal})
+    gates = {"equal_atol_1e-5": equal}
+    result = {"wall_vmap_s": walls["vmap"],
+              "wall_shard_map_s": walls["shard_map"],
+              "devices": jax.device_count(),
+              "cohort": cohort, "max_abs_diff": diff,
+              "equal_atol_1e-5": equal,
+              "wall_s": time.time() - t_bench0, "gates": gates}
+    _save("engine_sharded", result)
+    _bench_log("engine_sharded", result)
     if not equal:   # this row is a gate, not a report — fail the run
         raise RuntimeError(f"shard_map deltas diverge from vmap: {diff:.2e}")
     return diff
@@ -339,6 +344,7 @@ def serve():
     from repro.core.moreau import personalize_me
     from repro.serving import PersonalizationServer
 
+    t_bench0 = time.time()
     d, users, rounds = 32, 32, 4 if FAST else 8
     rng = np.random.RandomState(0)
 
@@ -401,13 +407,17 @@ def serve():
           f"ring_bytes_per_user={stats['ring_bytes_per_user']},"
           f"host_materializations={host_mat}", flush=True)
     print(f"serve,{t_server / n_req * 1e6:.0f},speedup={speedup:.2f}")
-    _save("serve", {"users": users, "rounds": rounds,
-                    "wall_per_request_s": t_loop,
-                    "wall_server_s": t_server, "speedup": speedup,
-                    "req_per_s_server": n_req / t_server,
-                    "req_per_s_per_request": n_req / t_loop,
-                    "ring_bytes_per_user": int(stats["ring_bytes_per_user"]),
-                    "host_materializations": int(host_mat)})
+    gates = {"host_materializations_zero": host_mat == 0}
+    result = {"users": users, "rounds": rounds,
+              "wall_per_request_s": t_loop,
+              "wall_server_s": t_server, "speedup": speedup,
+              "req_per_s_server": n_req / t_server,
+              "req_per_s_per_request": n_req / t_loop,
+              "ring_bytes_per_user": int(stats["ring_bytes_per_user"]),
+              "host_materializations": int(host_mat),
+              "wall_s": time.time() - t_bench0, "gates": gates}
+    _save("serve", result)
+    _bench_log("serve", result)
     if host_mat != 0:    # steady-state contract, not a report
         raise RuntimeError(f"serving path materialized {host_mat} banks")
     return speedup
@@ -531,6 +541,155 @@ def serve_transport():
     return ratio
 
 
+def serve_mesh():
+    """2-D ("cohort", "model") mesh serving (PR 10 acceptance row).
+
+    Drives the same windowed personalization workload on the 1-D 8-way
+    ``("cohort",)`` mesh and the 2-D ``(2, 4)`` mesh with model-axis
+    param shardings, and gates the tentpole's contract:
+
+      * bit-parity — final global params AND every served head are
+        ``np.array_equal`` between the two layouts (the mesh is a layout
+        choice, never a semantics choice);
+      * steady state — ``host_materializations`` stays 0 on BOTH layouts
+        (gather-not-transfer on both mesh axes);
+      * residency — per-device peak delta/snapshot/params residency on
+        the 2x4 mesh is ≤ 0.6x the 1-D peak at equal users: the model
+        axis splits every stored row 4 ways and the 2-slice cohort axis
+        buckets 4 users into 4 rows where the 8-slice 1-D mesh pads to 8.
+
+    Like ``engine_sharded``, needs the forced 8-device split before jax
+    initializes — re-execs itself when the parent sees < 8 devices.
+    """
+    if jax.device_count() < 8:
+        if os.environ.get("_SERVE_MESH_CHILD"):
+            raise RuntimeError(
+                "forced 8-device split did not take effect "
+                f"(device_count={jax.device_count()})")
+        env = dict(os.environ)
+        env["JAX_PLATFORMS"] = "cpu"
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=8"
+                            ).strip()
+        env["_SERVE_MESH_CHILD"] = "1"
+        res = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--only",
+             "serve_mesh"],
+            env=env, capture_output=True, text=True)
+        rows = [line for line in res.stdout.splitlines()
+                if line.startswith("serve_mesh,")]
+        for line in rows:
+            print(line, flush=True)
+        if res.returncode != 0 or not rows:
+            sys.stderr.write(res.stderr[-4000:])
+            raise RuntimeError("serve_mesh 8-device child failed")
+        return
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import PersAFLConfig
+    from repro.serving import PersonalizationServer
+    from repro.sharding.ctx import cohort_mesh, cohort_model_mesh
+
+    t_bench0 = time.time()
+    rng = np.random.RandomState(0)
+    d, classes, windows = 64, 64, 4
+
+    def loss(p, b):
+        logits = b["images"] @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.sum(
+            jax.nn.one_hot(b["labels"], classes) * logp, -1))
+
+    params = {"w": jnp.asarray(rng.randn(d, classes) * 0.1, jnp.float32),
+              "b": jnp.zeros((classes,), jnp.float32)}
+    pcfg = PersAFLConfig(option="C", lam=20.0, inner_steps=2,
+                         inner_eta=0.02, beta=0.5, alpha=0.05)
+    # crc32-balanced user ids (distinct mod 8, 2/2 mod 2): both layouts
+    # bucket them without cross-slice collisions, so the residency
+    # comparison measures the mesh, not hash luck
+    users = ["user000", "user004", "user003", "user007"]
+    batches = {u: {"images": rng.randn(8, d).astype(np.float32),
+                   "labels": rng.randint(0, classes, 8).astype(np.int32)}
+               for u in users}
+
+    def per_device_bytes(srv):
+        dev = {}
+
+        def add(x):
+            if not hasattr(x, "addressable_shards"):
+                return
+            for s in x.addressable_shards:
+                dev[s.device.id] = dev.get(s.device.id, 0) + s.data.nbytes
+        for banks in srv.ring._banks.values():
+            for bank in banks:
+                jax.tree.map(add, bank.stacked)
+        for snap in srv.ring._snapshots.values():
+            jax.tree.map(add, snap)
+        jax.tree.map(add, srv.params)
+        return dev
+
+    def drive(mesh, shardings):
+        srv = PersonalizationServer(params, loss, pcfg, modes=("C",),
+                                    cohort_impl="shard_map", mesh=mesh,
+                                    windows=windows,
+                                    param_shardings=shardings)
+        heads = {}
+        t0 = time.time()
+        for _ in range(windows):            # fill the ring to steady state
+            tickets = {u: srv.submit(u, batches[u], mode="C")
+                       for u in users}
+            srv.flush()
+            heads = {u: jax.tree.map(np.asarray, srv.poll(t))
+                     for u, t in tickets.items()}
+            srv.advance_window()
+        return srv, heads, time.time() - t0
+
+    srv1, heads1, wall1 = drive(cohort_mesh(), None)
+    m24 = cohort_model_mesh(4)
+    shardings = {"w": NamedSharding(m24, P(None, "model")),
+                 "b": NamedSharding(m24, P("model"))}
+    srv2, heads2, wall2 = drive(m24, shardings)
+
+    p1 = jax.tree.map(np.asarray, srv1.params)
+    p2 = jax.tree.map(np.asarray, srv2.params)
+    params_equal = all(np.array_equal(p1[k], p2[k]) for k in p1)
+    heads_equal = all(
+        np.array_equal(heads1[u][k], heads2[u][k])
+        for u in users for k in heads1[u])
+    host_mat = (int(srv1.stats["host_materializations"]),
+                int(srv2.stats["host_materializations"]))
+    peak1 = max(per_device_bytes(srv1).values())
+    peak2 = max(per_device_bytes(srv2).values())
+    ratio = peak2 / peak1
+    print(f"serve_mesh,1d,wall_s={wall1:.3f},peak_device_bytes={peak1},"
+          f"host_materializations={host_mat[0]}", flush=True)
+    print(f"serve_mesh,2x4,wall_s={wall2:.3f},peak_device_bytes={peak2},"
+          f"params_bit_equal={params_equal},heads_bit_equal={heads_equal},"
+          f"host_materializations={host_mat[1]}", flush=True)
+    print(f"serve_mesh,0,residency_ratio={ratio:.3f}")
+    gates = {"params_bit_equal": params_equal,
+             "heads_bit_equal": heads_equal,
+             "host_materializations_zero": host_mat == (0, 0),
+             "residency_ratio_le_0p6": ratio <= 0.6}
+    result = {"users": len(users), "windows": windows,
+              "wall_1d_s": wall1, "wall_2x4_s": wall2,
+              "peak_device_bytes_1d": int(peak1),
+              "peak_device_bytes_2x4": int(peak2),
+              "residency_ratio": ratio,
+              "params_bit_equal": params_equal,
+              "heads_bit_equal": heads_equal,
+              "host_materializations_1d": host_mat[0],
+              "host_materializations_2x4": host_mat[1],
+              "wall_s": time.time() - t_bench0, "gates": gates}
+    _save("serve_mesh", result)
+    _bench_log("serve_mesh", result)
+    for gate, ok in gates.items():
+        if not ok:
+            raise RuntimeError(f"serve_mesh gate failed: {gate} ({result})")
+    return ratio
+
+
 def partial():
     """Partial-model personalization: head-only rows end-to-end.
 
@@ -553,6 +712,7 @@ def partial():
     from repro.core import PersAFLConfig
     from repro.serving import PersonalizationServer
 
+    t_bench0 = time.time()
     d, users, windows = 32, 32, 3
     rng = np.random.RandomState(0)
 
@@ -619,13 +779,19 @@ def partial():
     print(f"partial,convergence,acc_full={a_full:.3f},"
           f"acc_head_only={a_head:.3f},gap={gap:.3f}", flush=True)
     print(f"partial,0,bytes_ratio={ratio:.1f}")
-    _save("partial", {
+    gates = {"bytes_ratio_ge_20": ratio >= 20.0,
+             "acc_gap_le_0p1": gap <= 0.1,
+             "backbone_bit_parity": True}
+    result = {
         "ring_bytes_per_user_full": bytes_per_user["full"],
         "ring_bytes_per_user_head_only": bytes_per_user["head_only"],
         "users_per_gib_full": 2 ** 30 // bytes_per_user["full"],
         "users_per_gib_head_only": 2 ** 30 // bytes_per_user["head_only"],
         "bytes_ratio": ratio, "backbone_bit_parity": True,
-        "acc_full": a_full, "acc_head_only": a_head, "acc_gap": gap})
+        "acc_full": a_full, "acc_head_only": a_head, "acc_gap": gap,
+        "wall_s": time.time() - t_bench0, "gates": gates}
+    _save("partial", result)
+    _bench_log("partial", result)
     if ratio < 20.0:    # the residency win is the point — gate it
         raise RuntimeError(
             f"head-only rows only {ratio:.1f}x smaller than full rows "
@@ -955,6 +1121,7 @@ BENCHES = {
     "engine_sharded": engine_sharded,
     "serve": serve,
     "serve_transport": serve_transport,
+    "serve_mesh": serve_mesh,
     "partial": partial,
     "quant": quant,
     "scale": scale,

@@ -7,8 +7,9 @@ Paper-faithful mode: on receiving Δ from any client, immediately
 Beyond-paper (FedBuff [51]; unbounded-gradient analysis [63]): a buffered
 variant aggregates M deltas then applies their mean once — on the TPU mesh
 this is one psum over the cohort axes per round (DESIGN.md §2/§5).  The
-event-driven counterpart is :class:`repro.fl.simulator.BufferedAsyncSimulator`,
-which feeds :func:`apply_buffered` one (Σ Δ, M, Σ τ, max τ) tuple per flush.
+event-driven counterpart is ``FLRun(schedule=buffered(M))``
+(:mod:`repro.fl.api`), which feeds :func:`apply_buffered_rows` one stacked
+bank + weight vector per flush.
 
 Every apply routes through ``kernels/fused_update.apply_delta_tree`` — a
 single read-modify-write pass per leaf with a *traced* scale, so one compile
@@ -122,21 +123,22 @@ def _apply_rows_state_jit(donate: bool):
     # snapshot, the simulators need not)
     @functools.partial(jax.jit, static_argnames=("mode",),
                        donate_argnums=donate_argnums(0) if donate else ())
-    def apply(state, delta_stack, weights, count, staleness_max,
+    def apply(state, delta_stack, weights, order, count, staleness_max,
               staleness_sum, mode: str = "auto"):
         params = state.params
         if (jax.tree_util.tree_structure(delta_stack)
                 == jax.tree_util.tree_structure(params)):
             # full-model stack: the original path, bit-for-bit
             new_params = apply_rows_tree(params, delta_stack, weights,
-                                         mode=mode)
+                                         mode=mode, order=order)
         else:
             # personal_subset stack (pruned structure, core.subset): apply
             # only the subset leaves and pass the backbone through
             # untouched.  The structure comparison is a trace-time Python
             # branch — jit already caches per treedef, so no static args.
             new_sub = apply_rows_tree(subset_like(params, delta_stack),
-                                      delta_stack, weights, mode=mode)
+                                      delta_stack, weights, mode=mode,
+                                      order=order)
             new_params = merge_subset(params, new_sub)
         return ServerState(
             params=new_params,
@@ -158,21 +160,21 @@ def _apply_rows_q_state_jit(donate: bool):
     # copy of the bank never exists, not even transiently inside the jit
     @functools.partial(jax.jit, static_argnames=("mode",),
                        donate_argnums=donate_argnums(0) if donate else ())
-    def apply(state, q_stack, weights, count, staleness_max,
+    def apply(state, q_stack, weights, order, count, staleness_max,
               staleness_sum, mode: str = "auto"):
         params = state.params
         if (jax.tree_util.tree_structure(q_stack.q)
                 == jax.tree_util.tree_structure(params)):
             new_params = apply_rows_q_tree(params, q_stack.q,
                                            q_stack.scales, weights,
-                                           mode=mode)
+                                           mode=mode, order=order)
         else:
             # personal_subset stack: apply the subset leaves only, pass
             # the backbone through untouched (same trace-time branch as
             # the fp32 overload)
             new_sub = apply_rows_q_tree(subset_like(params, q_stack.q),
                                         q_stack.q, q_stack.scales,
-                                        weights, mode=mode)
+                                        weights, mode=mode, order=order)
             new_params = merge_subset(params, new_sub)
         return ServerState(
             params=new_params,
@@ -485,8 +487,20 @@ def robust_flush_weights(
             for key in groups}, info
 
 
+def _row_order(delta_stack, order) -> jnp.ndarray:
+    """Resolve a flush's row-accumulation order to a traced int32 vector
+    (identity when the caller has no admission order to impose)."""
+    if order is None:
+        if isinstance(delta_stack, QuantStack):
+            delta_stack = delta_stack.q
+        cap = jax.tree_util.tree_leaves(delta_stack)[0].shape[0]
+        order = np.arange(cap, dtype=np.int32)
+    return jnp.asarray(order, jnp.int32)
+
+
 def apply_buffered_rows(state: ServerState, delta_stack, weights, count,
-                        staleness_max, staleness_sum=0.0) -> ServerState:
+                        staleness_max, staleness_sum=0.0,
+                        order=None) -> ServerState:
     """Stacked-buffer overload of :func:`apply_buffered`.
 
     ``delta_stack`` is a DeltaBank buffer — a params-shaped pytree whose
@@ -498,19 +512,23 @@ def apply_buffered_rows(state: ServerState, delta_stack, weights, count,
     number of *non-zero-weight* rows, which the version counter advances
     by.  Weights stay traced, so one compile per bucket size serves every
     staleness/damping composition.  The Pallas-vs-oracle dispatch is
-    resolved HERE, on the concrete stack — a cohort-sharded buffer must
-    take the oracle path (per-shard partial sums + one psum), and inside
-    the jit the leaves are tracers that can't reveal their sharding.
+    resolved HERE, on the concrete stack — a device-spanning buffer (the
+    shard_map banks, 1-D or 2-D mesh alike) must take the sequential
+    oracle path (``mode="seq"``: a mesh-invariant row-accumulation order,
+    optionally the caller's ``order``), and inside the jit the leaves are
+    tracers that can't reveal their sharding.
     """
-    mode = "ref" if spans_devices(delta_stack) else "auto"
+    mode = "seq" if spans_devices(delta_stack) else "auto"
     return _apply_rows_state_jit(True)(state, delta_stack,
                                        jnp.asarray(weights, jnp.float32),
+                                       _row_order(delta_stack, order),
                                        count, staleness_max, staleness_sum,
                                        mode=mode)
 
 
 def apply_admitted_rows(state: ServerState, delta_stack, weights, count,
-                        staleness_max, staleness_sum=0.0) -> ServerState:
+                        staleness_max, staleness_sum=0.0,
+                        order=None) -> ServerState:
     """Serving-window overload of :func:`apply_buffered_rows`.
 
     Same fused stacked apply, but the incoming state is NOT donated: the
@@ -528,16 +546,24 @@ def apply_admitted_rows(state: ServerState, delta_stack, weights, count,
     :class:`repro.core.quant.QuantStack` and the apply dispatches to the
     fused dequant×weight×accumulate kernel (``apply_rows_q``) — straggler
     re-admission never materializes fp32 rows.
+
+    ``order`` (from the serving ring) is the window's admission order — a
+    mesh-independent total order on the rows.  On device-spanning stacks
+    the apply accumulates rows sequentially in that order, so the
+    post-advance params are bit-identical between the 1-D ``("cohort",)``
+    and 2-D ``("cohort", "model")`` layouts even though the two meshes
+    place the same users at different bank rows.
     """
-    mode = "ref" if spans_devices(delta_stack) else "auto"
+    mode = "seq" if spans_devices(delta_stack) else "auto"
+    ordv = _row_order(delta_stack, order)
     if isinstance(delta_stack, QuantStack):
         return _apply_rows_q_state_jit(False)(
             state, delta_stack, jnp.asarray(weights, jnp.float32),
-            count, staleness_max, staleness_sum, mode=mode)
+            ordv, count, staleness_max, staleness_sum, mode=mode)
     return _apply_rows_state_jit(False)(state, delta_stack,
                                         jnp.asarray(weights, jnp.float32),
-                                        count, staleness_max, staleness_sum,
-                                        mode=mode)
+                                        ordv, count, staleness_max,
+                                        staleness_sum, mode=mode)
 
 
 def staleness_stats(state: ServerState) -> Dict:

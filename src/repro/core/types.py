@@ -33,7 +33,7 @@ class PersAFLConfig:
 
     # beyond-paper: buffered server aggregation (FedBuff [51,63]) — M deltas
     # are summed and applied as one w ← w − β/M ΣΔ server round
-    # (BufferedAsyncSimulator); 1 = paper-faithful immediate apply
+    # (FLRun schedule=buffered(M)); 1 = paper-faithful immediate apply
     buffer_size: int = 1
     # beyond-paper: FedAsync-style polynomial staleness damping a in
     # β/(1+τ)^a on async applies; 0 = paper-faithful constant β

@@ -3,9 +3,17 @@ from repro.fl.engine import CohortEngine, DeltaBank           # noqa: F401
 from repro.fl.api import (ApplyPolicy, FLRun, History,        # noqa: F401
                           Strategy, buffered, immediate, register_strategy,
                           strategy, strategy_names, sync_barrier)
-from repro.fl.simulator import (AsyncSimulator,               # noqa: F401
-                                BufferedAsyncSimulator, SyncSimulator)
 from repro.fl.evaluate import make_personalized_eval          # noqa: F401
 from repro.fl.scenario import (Adversarial, ChurnModel,       # noqa: F401
                                DeviceScheduler, Diurnal, EventStream,
                                ScenarioSpec, Tier)
+
+
+def __getattr__(name: str):
+    # the removed PR-4 simulator shims: defer to repro.fl.simulator's
+    # ImportError breadcrumb (it names the FLRun spelling to migrate to)
+    if name in ("AsyncSimulator", "BufferedAsyncSimulator",
+                "SyncSimulator"):
+        from repro.fl import simulator
+        return getattr(simulator, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

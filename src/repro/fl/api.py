@@ -32,8 +32,9 @@ shard_map machinery — register it once and it runs under all three
 schedules, the benchmarks, and (stateless ones) the serving micro-batcher.
 
 The legacy class names (``AsyncSimulator``, ``BufferedAsyncSimulator``,
-``SyncSimulator``) survive one release as deprecation shims in
-:mod:`repro.fl.simulator`.
+``SyncSimulator``) were removed in PR 10 after their one-release
+deprecation window; :mod:`repro.fl.simulator` keeps ImportError
+breadcrumbs with the exact FLRun spelling for each.
 """
 from __future__ import annotations
 
@@ -593,7 +594,7 @@ class FLRun:
                  strategy="persafl", schedule="immediate",
                  batch_size: int = 32, seed: int = 0,
                  vectorized: bool = True, cohort_impl: str = "auto",
-                 scheduler: str = "auto"):
+                 scheduler: str = "auto", mesh=None, param_shardings=None):
         if scheduler not in ("auto", "heap", "device"):
             raise ValueError(f"scheduler must be 'auto', 'heap' or "
                              f"'device', got {scheduler!r}")
@@ -607,10 +608,14 @@ class FLRun:
         self.schedule = resolve_schedule(schedule)
         self.scheduler = scheduler
         self.state = init_server_state(_own_copy(init_params))
+        # mesh / param_shardings thread straight to the engine: on a 2-D
+        # ("cohort", "model") mesh the run's banks come back sharded on
+        # both axes (see repro.sharding.ctx.cohort_model_mesh)
         self.engine = CohortEngine(self.strategy.pcfg, loss_fn,
                                    vectorized=vectorized,
                                    cohort_impl=cohort_impl,
-                                   strategy=self.strategy)
+                                   strategy=self.strategy, mesh=mesh,
+                                   param_shardings=param_shardings)
         self._cstates: List = [None] * len(clients)
         self._on_eval: Optional[Callable] = None
         self._stop = False

@@ -47,8 +47,13 @@ DeltaBank contract:
     same single round-trip the pre-bank engine paid, now lazy.
   * In ``cohort_impl="shard_map"`` the buffer is sharded over the cohort
     mesh axis; ``row()`` gathers (host materialization), while
-    ``apply_rows_tree``/``update_cohort_mean`` reduce it with a single
-    on-device psum.
+    ``apply_rows_tree``/``update_cohort_mean`` reduce it on device.  On
+    the 2-D ``("cohort", "model")`` mesh the bank's model dims are
+    additionally split along "model" (an explicit post-cohort reshard to
+    ``P("cohort", *param_spec)`` per leaf, derived from the params'
+    shardings; the cohort compute itself runs model-replicated — see
+    ``repro.sharding.ctx``), and per-bank gathers (``client_state``,
+    ``stacked``) stay sharded — gather-not-transfer on both axes.
 
 Strategy contract (PR 4, ``repro.fl.api``):
 
@@ -62,9 +67,8 @@ Strategy contract (PR 4, ``repro.fl.api``):
     and the returned bank carries the updated stack
     (:meth:`DeltaBank.client_state`).  FedProx/SCAFFOLD are thereby
     first-class cohort-engine citizens — their deltas land in the
-    DeltaBank like everyone else's.
-  * The pre-PR-4 ``client_fn=`` override is a deprecated alias for a
-    stateless strategy and will be removed next release.
+    DeltaBank like everyone else's.  (The pre-PR-4 ``client_fn=``
+    override was removed in PR 10: wrap the rule in a Strategy.)
   * A strategy with ``personal_subset`` set returns deltas in the pruned
     subset structure (``repro.core.subset``): the bank's stacked buffer —
     and everything downstream of it (ring rows, head cache, wire frames) —
@@ -77,7 +81,6 @@ baseline the ``engine`` benchmark row measures against.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -87,7 +90,8 @@ import numpy as np
 from repro.core import client_update, split_batches_for_option
 from repro.core.types import PersAFLConfig
 from repro.kernels.fused_update.ops import donate_argnums
-from repro.sharding.ctx import cohort_mesh, shard_map_compat
+from repro.sharding.ctx import (active_mesh, cohort_axis_size, cohort_mesh,
+                                shard_map_compat)
 
 
 def _stack(batch_list: List):
@@ -196,18 +200,41 @@ class CohortEngine:
         amortized over the cohort, but per-client compute stays sequential
         — XLA-CPU lowers batched GEMMs poorly, so vmap can *lose* to
         per-event dispatch there).
-      * ``"shard_map"`` — the cohort axis is split over every addressable
-        device of a 1-D ``("cohort",)`` mesh (8-way forced-host-device CPU
-        and TPU pods alike); params are replicated, each shard lax.maps its
-        local rows, and the delta buffer comes back sharded over the mesh —
-        it never gathers unless a row is materialized.  Buckets round up to
-        a device-count multiple.
+      * ``"shard_map"`` — the cohort axis is split over the mesh's
+        "cohort" axis (8-way forced-host-device CPU and TPU pods alike);
+        each cohort slice lax.maps its local rows, and the delta buffer
+        comes back sharded over the mesh — it never gathers unless a row
+        is materialized.  Buckets round up to a cohort-slice-count
+        multiple.
     All are the same math; ``"auto"`` selects vmap/map by backend.
+
+    ``mesh`` picks the layout for the shard_map path: the 1-D
+    ``("cohort",)`` mesh (default), or a 2-D ``("cohort", "model")`` mesh
+    from :func:`repro.sharding.ctx.cohort_model_mesh` — the shard_map
+    body stays Manual over "cohort" ONLY (the in/out ``P("cohort")``
+    pytree prefixes describe just the manual axis), while the "model"
+    axis is left to the Auto partitioner: params constrained by
+    ``param_shardings`` (a params-shaped pytree of ``NamedSharding``s,
+    e.g. from :func:`repro.sharding.rules.param_shardings`) propagate
+    their model-axis placement through the per-row update, so the bank's
+    rows come back split along BOTH axes.  The masked cohort mean is one
+    ``psum("cohort")`` per leaf and never crosses "model" — a
+    cross-model reduction would re-reduce within each row.  When no
+    ``mesh`` is passed, the ambient :func:`repro.sharding.ctx.use_mesh`
+    context (if any) is consulted before the memoized 1-D default.
     """
 
     def __init__(self, pcfg: PersAFLConfig, loss_fn: Callable, *,
                  vectorized: bool = True, cohort_impl: str = "auto",
-                 client_fn: Optional[Callable] = None, strategy=None):
+                 client_fn=None, strategy=None, mesh=None,
+                 param_shardings=None):
+        if client_fn is not None:
+            raise TypeError(
+                "CohortEngine(client_fn=...) was removed in PR 10 (it was "
+                "deprecated since PR 4): wrap the update rule in a "
+                "repro.fl.api.Strategy and pass strategy=... — e.g. "
+                "strategy('personalize', mode='C') for the serving "
+                "override it used to spell.")
         self.pcfg = pcfg
         self.loss_fn = loss_fn
         self.vectorized = vectorized
@@ -228,9 +255,6 @@ class CohortEngine:
         self.stateful = bool(strategy is not None
                              and getattr(strategy, "stateful", False))
         if strategy is not None:
-            if client_fn is not None:
-                raise ValueError("pass strategy= or client_fn=, not both")
-
             def _one(params, batches):
                 # metrics are dropped so XLA dead-code-eliminates the
                 # per-step norm reductions — schedulers only consume the
@@ -247,15 +271,6 @@ class CohortEngine:
                     params, batches,
                     strategy.assemble_state(cstate, shared))
                 return delta, new_cstate
-        elif client_fn is not None:
-            warnings.warn(
-                "CohortEngine(client_fn=...) is deprecated; wrap the update "
-                "rule in a repro.fl.api.Strategy and pass strategy=...",
-                DeprecationWarning, stacklevel=2)
-            # legacy override: any (params, batch) -> params-shaped delta
-            # rides the same vmap/map/shard_map cohort machinery
-            _one = client_fn
-            _one_s = None
         else:
             def _one(params, batches_3q):
                 batches = split_batches_for_option(pcfg.option, batches_3q)
@@ -282,9 +297,67 @@ class CohortEngine:
                 jax.lax.map(lambda bc: _one_s(params, bc[0], bc[1], shared),
                             (stacked, cstates))
         elif cohort_impl == "shard_map":
-            from jax.sharding import PartitionSpec as P
-            self._mesh = cohort_mesh()
-            self._ndev = self._mesh.devices.size
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            self._mesh = mesh if mesh is not None \
+                else (active_mesh() or cohort_mesh())
+            if "cohort" not in self._mesh.axis_names:
+                raise ValueError(
+                    f"cohort_impl='shard_map' needs a mesh with a 'cohort' "
+                    f"axis, got axes {self._mesh.axis_names}; build one "
+                    f"with repro.sharding.ctx.cohort_model_mesh()")
+            # _ndev is the COHORT-AXIS size, not the device count: it
+            # drives bucket rounding and the batcher's user→cohort-slice
+            # keying, and on a ("cohort", "model") mesh each cohort slice
+            # is a model-parallel device group
+            self._ndev = cohort_axis_size(self._mesh)
+            self._param_shardings = param_shardings
+
+            # the shard_map below is Manual over EVERY mesh axis.  Cohort
+            # rows split over "cohort"; params enter replicated (P() in-
+            # spec) so each row's update is full-size local math — no
+            # cross-"model" collective ever runs inside a grad, whose
+            # reductions would otherwise reassociate with the model-axis
+            # size and break bit-parity across mesh layouts.  (A partially-
+            # Auto model axis would shard the compute too, but jax 0.4.x
+            # hard-crashes XLA on any scan under subgroup-manual spmd —
+            # and real archs scan everywhere.)  The model axis shards
+            # STORAGE: _bank_constrain re-shards the delta stack on the
+            # way out, and the server device_puts params/snapshots.
+            _all_axes = tuple(self._mesh.axis_names)
+
+            def _gather(params):
+                # explicit replicate of model-sharded params before the
+                # Manual region (device-to-device all-gather, one per
+                # cohort call, never a host materialization); also keeps
+                # shard_map from seeing an input whose committed sharding
+                # disagrees with its P() in-spec
+                if param_shardings is None:
+                    return params
+                repl = NamedSharding(self._mesh, P())
+                return jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(x, repl),
+                    params)
+
+            def _bank_constrain(stack):
+                # re-shard the delta stack for storage: each param leaf's
+                # model-axis spec, with the cohort axis prepended for the
+                # row dim — P(None, "model") params make P("cohort", None,
+                # "model") bank rows.  Pure placement (each device keeps
+                # its slice of rows it already holds replicated): bits
+                # never change, so parity with the 1-D path survives.
+                # Subset-pruned delta trees don't match the full-params
+                # sharding tree — they stay cohort-sharded only.
+                if param_shardings is None:
+                    return stack
+                try:
+                    sh = jax.tree.map(
+                        lambda s: NamedSharding(
+                            self._mesh, P("cohort", *s.spec)),
+                        param_shardings)
+                    return jax.tree.map(
+                        jax.lax.with_sharding_constraint, stack, sh)
+                except ValueError:
+                    return stack
 
             def _shard_body(params, stacked):
                 return jax.lax.map(lambda b: _one(params, b), stacked)
@@ -293,13 +366,16 @@ class CohortEngine:
                 # out_specs is a pytree PREFIX: a bare P("cohort") covers
                 # whatever structure the strategy's delta takes — full
                 # params-shaped or a pruned personal_subset tree (which a
-                # params-shaped spec tree could not describe)
-                return shard_map_compat(
+                # params-shaped spec tree could not describe).  Only the
+                # manual "cohort" axis appears in the specs: the "model"
+                # axis (if the mesh has one) stays Auto.
+                out = shard_map_compat(
                     _shard_body, mesh=self._mesh,
                     in_specs=(jax.tree.map(lambda _: P(), params),
                               jax.tree.map(lambda _: P("cohort"), stacked)),
                     out_specs=P("cohort"),
-                    manual_axes=("cohort",))(params, stacked)
+                    manual_axes=_all_axes)(_gather(params), stacked)
+                return _bank_constrain(out)
 
             def _shard_body_s(params, stacked, cstates, shared):
                 return jax.lax.map(
@@ -311,19 +387,23 @@ class CohortEngine:
                 # state buffers is split on the cohort axis, params and the
                 # shared state replicated; outputs (delta stack, cstate
                 # stack) come back cohort-sharded
-                return shard_map_compat(
+                delta, cs = shard_map_compat(
                     _shard_body_s, mesh=self._mesh,
                     in_specs=(P(), P("cohort"), P("cohort"), P()),
                     out_specs=(P("cohort"), P("cohort")),
-                    manual_axes=("cohort",))(params, stacked, cstates,
-                                             shared)
+                    manual_axes=_all_axes)(_gather(params), stacked,
+                                           cstates, shared)
+                return _bank_constrain(delta), cs
 
             def _sum_body(params, stacked, mask):
                 deltas = jax.lax.map(lambda b: _one(params, b), stacked)
                 local = jax.tree.map(
                     lambda d: jnp.tensordot(mask, d.astype(jnp.float32),
                                             axes=(0, 0)), deltas)
-                # the whole cohort reduction is this ONE psum per leaf
+                # the whole cohort reduction is this ONE psum per leaf,
+                # over "cohort" ONLY — the model axis (Auto) already holds
+                # every row replicated, so a psum crossing "model" would
+                # multiply the sum by the model-axis size
                 return jax.tree.map(lambda x: jax.lax.psum(x, "cohort"),
                                     local)
 
@@ -334,7 +414,8 @@ class CohortEngine:
                               jax.tree.map(lambda _: P("cohort"), stacked),
                               P("cohort")),
                     out_specs=jax.tree.map(lambda _: P(), params),
-                    manual_axes=("cohort",))(params, stacked, mask)
+                    manual_axes=_all_axes)(_gather(params), stacked,
+                                           mask)
 
             self._jit_cohort_sum = jax.jit(sum_fn,
                                            donate_argnums=donate)
@@ -359,8 +440,10 @@ class CohortEngine:
         return bank
 
     def _bucket(self, k: int) -> int:
-        """Pow2 bucket, rounded up to a device-count multiple when the
-        cohort axis is sharded (every shard gets equal rows)."""
+        """Pow2 bucket, rounded up to a cohort-slice-count multiple when
+        the cohort axis is sharded (every cohort slice gets equal rows; on
+        the 2-D mesh a slice is a whole model-parallel device group, so a
+        2×4 mesh rounds to multiples of 2, not 8)."""
         pow2 = 1 << max(k - 1, 0).bit_length()
         if self._ndev > 1:
             per_dev = -(-k // self._ndev)

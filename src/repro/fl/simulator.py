@@ -1,122 +1,41 @@
-"""DEPRECATED simulator class names — thin shims over :mod:`repro.fl.api`.
+"""REMOVED — the PR-4 deprecation shims ended their one-release window.
 
-PR 4 collapsed the three discrete-event simulators into the single
-:class:`repro.fl.api.FLRun` event-loop core: a registry
-:class:`~repro.fl.api.Strategy` (the local update rule — Options A/B/C,
-FedProx, SCAFFOLD, …) composed with an :class:`~repro.fl.api.ApplyPolicy`
-(the server schedule — ``immediate()`` / ``buffered(M)`` /
-``sync_barrier(m)``).  The names below survive one release for pre-PR-4
-call sites and emit :class:`DeprecationWarning` on construction; each is a
-*subclass* of FLRun, so every attribute (``state``, ``engine``, ``rng``,
-``delays``, ``final_stats``) and the History contract behave identically.
+The three legacy simulator classes lived here as ``DeprecationWarning``
+shims from PR 4 until PR 10.  Importing them now raises ``ImportError``
+with the exact :mod:`repro.fl.api` spelling to migrate to:
 
-Migration map::
+    AsyncSimulator(clients, loss_fn, init_params, pcfg, delays)
+        -> FLRun(clients=..., loss_fn=..., init_params=..., pcfg=...,
+                 delays=..., strategy="persafl", schedule=immediate())
 
-    AsyncSimulator(...)                    -> FLRun(..., schedule=immediate())
     BufferedAsyncSimulator(..., buffer_size=M)
-                                           -> FLRun(..., schedule=buffered(M))
-    SyncSimulator(..., algo="fedprox", clients_per_round=m, fedprox_mu=mu)
-                                           -> FLRun(..., strategy=strategy(
-                                                  "fedprox", mu=mu),
-                                                  schedule=sync_barrier(m))
+        -> FLRun(..., schedule=buffered(M))
 
-FedProx and SCAFFOLD no longer take a sequential per-client jit loop: as
-registry strategies they run through the cohort engine (stacked client
-state, deltas in the on-device DeltaBank) like every other rule.
+    SyncSimulator(..., algo="fedavg"|"perfedavg"|"pfedme"|"fedprox"|
+                  "scaffold", clients_per_round=m, fedprox_mu=mu)
+        -> FLRun(..., strategy=algo, schedule=sync_barrier(m))
+           (fedprox_mu=mu  ->  strategy=strategy("fedprox", mu=mu))
+
+``run(max_server_rounds=N)`` is ``run(max_rounds=N)`` (the alias is still
+accepted); History, eval hooks and the stats surface carry over unchanged.
 """
 from __future__ import annotations
 
-import warnings
-from typing import Optional
-
-from repro.fl.api import (FLRun, History, buffered,  # noqa: F401
-                          immediate, strategy, sync_barrier)
-
-
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"repro.fl.simulator.{old} is deprecated and will be removed next "
-        f"release; use {new}", DeprecationWarning, stacklevel=3)
+_REMOVED = {
+    "AsyncSimulator":
+        "FLRun(..., strategy='persafl', schedule=immediate())",
+    "BufferedAsyncSimulator":
+        "FLRun(..., schedule=buffered(M))",
+    "SyncSimulator":
+        "FLRun(..., strategy=<algo name>, schedule=sync_barrier(m))",
+}
 
 
-class AsyncSimulator(FLRun):
-    """DEPRECATED shim: PersA-FL / FedAsync immediate-apply runner.
-
-    Use ``FLRun(strategy="persafl", schedule=immediate(), ...)``.
-    """
-
-    def __init__(self, *, clients, loss_fn, init_params, pcfg, delays,
-                 batch_size: int = 32, seed: int = 0,
-                 vectorized: bool = True):
-        _deprecated("AsyncSimulator",
-                    "repro.fl.api.FLRun(strategy='persafl', "
-                    "schedule=immediate())")
-        super().__init__(clients=clients, loss_fn=loss_fn,
-                         init_params=init_params, pcfg=pcfg, delays=delays,
-                         strategy="persafl", schedule=immediate(),
-                         batch_size=batch_size, seed=seed,
-                         vectorized=vectorized)
-
-    def run(self, *, max_server_rounds: int, **kw) -> History:
-        return super().run(max_rounds=max_server_rounds, **kw)
-
-
-class BufferedAsyncSimulator(FLRun):
-    """DEPRECATED shim: FedBuff-style buffered asynchronous scheduler.
-
-    Use ``FLRun(strategy="persafl", schedule=buffered(M), ...)``.
-    """
-
-    def __init__(self, *, clients, loss_fn, init_params, pcfg, delays,
-                 buffer_size: Optional[int] = None, batch_size: int = 32,
-                 seed: int = 0, vectorized: bool = True):
-        _deprecated("BufferedAsyncSimulator",
-                    "repro.fl.api.FLRun(strategy='persafl', "
-                    "schedule=buffered(M))")
-        super().__init__(clients=clients, loss_fn=loss_fn,
-                         init_params=init_params, pcfg=pcfg, delays=delays,
-                         strategy="persafl", schedule=buffered(buffer_size),
-                         batch_size=batch_size, seed=seed,
-                         vectorized=vectorized)
-
-    @property
-    def buffer_size(self) -> int:
-        m = getattr(self.schedule, "m_effective", self.schedule.m)
-        return m if m is not None else max(int(self.pcfg.buffer_size), 1)
-
-    def run(self, *, max_server_rounds: int, **kw) -> History:
-        return super().run(max_rounds=max_server_rounds, **kw)
-
-
-#: legacy ``algo`` string -> registry strategy spec
-_SYNC_ALGOS = ("fedavg", "perfedavg", "pfedme", "fedprox", "scaffold")
-
-
-class SyncSimulator(FLRun):
-    """DEPRECATED shim: synchronous FedAvg-family rounds.
-
-    Use ``FLRun(strategy=strategy(algo, ...), schedule=sync_barrier(m))``.
-    """
-
-    def __init__(self, *, clients, loss_fn, init_params, pcfg, delays,
-                 algo: str = "fedavg", clients_per_round: int = 10,
-                 batch_size: int = 32, seed: int = 0,
-                 fedprox_mu: float = 0.1, vectorized: bool = True):
-        if algo not in _SYNC_ALGOS:
-            raise KeyError(algo)
-        _deprecated("SyncSimulator",
-                    f"repro.fl.api.FLRun(strategy=strategy({algo!r}), "
-                    f"schedule=sync_barrier(m))")
-        self.algo = algo
-        strat = strategy("fedprox", mu=fedprox_mu) if algo == "fedprox" \
-            else strategy(algo)
-        super().__init__(clients=clients, loss_fn=loss_fn,
-                         init_params=init_params, pcfg=pcfg, delays=delays,
-                         strategy=strat,
-                         schedule=sync_barrier(clients_per_round),
-                         batch_size=batch_size, seed=seed,
-                         vectorized=vectorized)
-        self.m = clients_per_round
-
-    def run(self, *, max_rounds: int, **kw) -> History:
-        return super().run(max_rounds=max_rounds, **kw)
+def __getattr__(name: str):
+    if name in _REMOVED:
+        raise ImportError(
+            f"repro.fl.simulator.{name} was removed in PR 10 (deprecated "
+            f"since PR 4); use {_REMOVED[name]} from repro.fl.api — the "
+            f"repro.fl.simulator module docstring has the full migration "
+            f"map.")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -95,6 +95,37 @@ def spans_devices(tree) -> bool:
 
 
 @functools.lru_cache(maxsize=None)
+def _apply_rows_seq_jit():
+    # order-invariant sequential twin of _apply_rows_jit: the dispatch for
+    # device-spanning stacks, where a per-shard partial-sum reduction
+    # would make the flush result depend on the mesh layout
+    @functools.partial(jax.jit, donate_argnums=donate_argnums(0))
+    def apply(w_tree, stack_tree, weights, order):
+        s = jnp.asarray(weights, jnp.float32)
+        return jax.tree.map(
+            lambda w, d: R.apply_rows_seq_ref(w, d, s, order),
+            w_tree, stack_tree)
+    return apply
+
+
+@functools.lru_cache(maxsize=None)
+def _apply_rows_q_seq_jit():
+    @functools.partial(jax.jit, donate_argnums=donate_argnums(0))
+    def apply(w_tree, q_tree, scales_tree, weights, order):
+        s = jnp.asarray(weights, jnp.float32)
+        return jax.tree.map(
+            lambda w, q, sc: R.apply_rows_q_seq_ref(w, q, sc, s, order),
+            w_tree, q_tree, scales_tree)
+    return apply
+
+
+def _default_order(stack_tree):
+    import numpy as np
+    return np.arange(jax.tree.leaves(stack_tree)[0].shape[0],
+                     dtype=np.int32)
+
+
+@functools.lru_cache(maxsize=None)
 def _apply_rows_q_jit():
     @functools.partial(jax.jit, static_argnames=("mode",),
                        donate_argnums=donate_argnums(0))
@@ -107,33 +138,50 @@ def _apply_rows_q_jit():
 
 
 def apply_rows_q_tree(w_tree, q_tree, scales_tree, weights,
-                      mode: str = "auto"):
+                      mode: str = "auto", order=None):
     """Quantized twin of :func:`apply_rows_tree`: the stack arrives as an
     int8 ``q_tree`` (leaves ``[M, ...]``) + f32 ``scales_tree`` (leaves
     ``[M]``, per row per leaf — the :class:`repro.core.quant.QuantStack`
     components) and each leaf's apply folds dequant × admission weight ×
     accumulate into one fused pass — no fp32 copy of the bank is ever
-    materialized.  Sharded stacks force the oracle path for the same
-    reason as :func:`apply_rows_tree` (per-shard partials + one psum).
+    materialized.  Sharded stacks force the sequential oracle path for
+    the same reason as :func:`apply_rows_tree` (mesh-invariant reduction
+    order).
     """
     if mode == "auto" and spans_devices(q_tree):
-        mode = "ref"
+        mode = "seq"
+    if mode == "seq":
+        if order is None:
+            order = _default_order(q_tree)
+        return _apply_rows_q_seq_jit()(w_tree, q_tree, scales_tree,
+                                       weights, order)
     return _apply_rows_q_jit()(w_tree, q_tree, scales_tree, weights,
                                mode=mode)
 
 
-def apply_rows_tree(w_tree, stack_tree, weights, mode: str = "auto"):
+def apply_rows_tree(w_tree, stack_tree, weights, mode: str = "auto",
+                    order=None):
     """Stacked server apply w ← w − Σ_i weights[i]·Δ_i per leaf, fused.
 
     ``stack_tree`` is a DeltaBank buffer: params-shaped pytree whose leaves
     carry a leading ``[M]`` cohort axis and never leave the device;
     ``weights`` is the traced ``[M]`` f32 row-weight vector (β/M, staleness
     damping, padding masks).  One compile per (bucket, leaf-shape) serves
-    every flush.  A cohort-sharded stack forces the jnp oracle path — XLA
-    SPMD lowers its row reduction to per-shard partial sums plus one psum,
-    whereas the Pallas kernel has no partitioning rule and would gather the
-    whole multi-GB buffer onto every device.
+    every flush.
+
+    A device-spanning stack (``cohort_impl="shard_map"`` banks, on the 1-D
+    or 2-D mesh alike) forces ``mode="seq"``: the sequential oracle
+    (:func:`repro.kernels.fused_update.ref.apply_rows_seq_ref`)
+    accumulates rows one at a time — in ``order`` when given, row order
+    otherwise — so the flush result is bit-identical across mesh layouts.
+    The Pallas kernel has no partitioning rule (it would gather the whole
+    multi-GB buffer onto every device), and a ``jnp.sum`` reduction would
+    reassociate per cohort split.
     """
     if mode == "auto" and spans_devices(stack_tree):
-        mode = "ref"
+        mode = "seq"
+    if mode == "seq":
+        if order is None:
+            order = _default_order(stack_tree)
+        return _apply_rows_seq_jit()(w_tree, stack_tree, weights, order)
     return _apply_rows_jit()(w_tree, stack_tree, weights, mode=mode)

@@ -12,9 +12,17 @@ Quantized apply: w ← w − Σ_i s_i·scale_i·q_i  (int8 bank rows + per-row
 All of these are memory-bound elementwise chains over multi-GB parameter
 tensors on the assigned architectures; the kernel fuses each into a single
 HBM round-trip (DESIGN.md §6).
+The stacked applies come in two reduction orders: the free-association
+``jnp.sum`` forms below (fastest single-device lowering), and sequential
+``*_seq_ref`` twins that accumulate rows one at a time in an explicit
+order — the order-invariant oracle the sharded path uses so a flush's
+result is bit-identical on the 1-D ``("cohort",)`` and 2-D
+``("cohort", "model")`` meshes (a per-shard partial-sum reduction would
+reassociate differently per cohort split).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -66,4 +74,44 @@ def apply_rows_q_ref(w, q_stack, scales, weights):
              * jnp.asarray(scales, jnp.float32)
              ).reshape((-1,) + (1,) * w.ndim)
     acc = jnp.sum(coeff * q_stack.astype(jnp.float32), axis=0)
+    return (w.astype(jnp.float32) - acc).astype(w.dtype)
+
+
+def apply_rows_seq_ref(w, d_stack, weights, order):
+    """Order-invariant stacked apply: rows accumulate SEQUENTIALLY.
+
+    ``order`` is an int32 ``[M]`` row permutation; the accumulation chain
+    is ``((w − s_{o0}Δ_{o0}) − s_{o1}Δ_{o1}) − ...`` regardless of how the
+    stack is sharded — every step is elementwise, so XLA SPMD partitions
+    it spatially without reassociating the row chain.  This is what makes
+    a serving-window flush bit-identical across mesh layouts: callers pass
+    the *admission order* (a mesh-independent total order on the window's
+    rows) and the result no longer depends on which cohort slice a row
+    landed on.  Zero-weight padding rows contribute an exact ``+0``.
+    """
+    s = jnp.asarray(weights, jnp.float32)
+    order = jnp.asarray(order, jnp.int32)
+
+    def body(i, acc):
+        j = order[i]
+        return acc + s[j] * d_stack[j].astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, d_stack.shape[0], body,
+                            jnp.zeros(w.shape, jnp.float32))
+    return (w.astype(jnp.float32) - acc).astype(w.dtype)
+
+
+def apply_rows_q_seq_ref(w, q_stack, scales, weights, order):
+    """Quantized twin of :func:`apply_rows_seq_ref`: dequant folded into
+    the per-row coefficient, rows accumulated sequentially in ``order``."""
+    coeff = jnp.asarray(weights, jnp.float32) \
+        * jnp.asarray(scales, jnp.float32)
+    order = jnp.asarray(order, jnp.int32)
+
+    def body(i, acc):
+        j = order[i]
+        return acc + coeff[j] * q_stack[j].astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, q_stack.shape[0], body,
+                            jnp.zeros(w.shape, jnp.float32))
     return (w.astype(jnp.float32) - acc).astype(w.dtype)

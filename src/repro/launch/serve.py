@@ -34,6 +34,25 @@ via HEAD.  A malformed batch fails its flush group with a typed
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
       --listen 7777 --mode C
+
+``--model-axis M`` serves over the 2-D ``("cohort", "model")`` mesh
+(:func:`repro.sharding.ctx.cohort_model_mesh`): cohort slices are
+model-parallel device groups, and every capacity-bound artifact — delta
+banks, ring snapshots, head rows, the global params — is stored
+model-axis-sharded per :func:`repro.sharding.rules.param_shardings`.
+Served bits are identical to the 1-D path (the ``serve_mesh`` bench gates
+it); what the model axis buys is per-device residency.
+
+Multi-process serving: ``--coordinator HOST:PORT --num-processes N
+--process-id I`` runs ``jax.distributed.initialize`` before any device
+use, so N OS processes (one per host) form one JAX runtime whose global
+device set backs the mesh.  ``--num-processes 1`` (the default when only
+``--coordinator`` is given) is the single-host spelling and is what CI
+boots:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
+      --listen 0 --serve-seconds 2 --coordinator 127.0.0.1:12377 \
+      --num-processes 1 --process-id 0
 """
 from __future__ import annotations
 
@@ -238,10 +257,37 @@ def main():
     ap.add_argument("--serve-seconds", type=float, default=None,
                     help="with --listen: stop after this many seconds "
                          "(default: serve until interrupted)")
+    ap.add_argument("--model-axis", type=int, default=None, metavar="M",
+                    help="serve over the 2-D ('cohort', 'model') mesh with "
+                         "M-way model parallelism (device count must be a "
+                         "multiple of M); banks/snapshots/heads/params are "
+                         "stored model-axis-sharded, served bits match the "
+                         "1-D path")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="jax.distributed coordinator address; given alone "
+                         "it implies --num-processes 1 (single-host boot)")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="total process count for jax.distributed."
+                         "initialize (multi-host serving: one process per "
+                         "host, every process runs the same command with "
+                         "its own --process-id)")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this process's rank in [0, --num-processes)")
     args = ap.parse_args()
 
     if args.listen is not None:
         args.personalize = True
+
+    if args.coordinator is not None or args.num_processes is not None:
+        # must run before any device/backend use in this process
+        jax.distributed.initialize(
+            coordinator_address=args.coordinator or "127.0.0.1:12377",
+            num_processes=args.num_processes or 1,
+            process_id=args.process_id)
+        print(f"jax.distributed: process {jax.process_index()}/"
+              f"{jax.process_count()}, "
+              f"{jax.local_device_count()}/{jax.device_count()} local "
+              f"devices", flush=True)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -266,11 +312,23 @@ def main():
         pcfg = PersAFLConfig(option="C", lam=args.lam, alpha=args.alpha,
                              inner_steps=args.inner_steps, inner_eta=0.01)
         subset_spec = SubsetSpec.resolve(args.personal_subset, params)
+        mesh_kw = {}
+        if args.model_axis is not None:
+            from repro.sharding.ctx import cohort_model_mesh
+            from repro.sharding.rules import param_shardings
+            mesh = cohort_model_mesh(args.model_axis)
+            mesh_kw = {"cohort_impl": "shard_map", "mesh": mesh,
+                       "param_shardings":
+                           param_shardings(cfg, params, mesh)}
+            print(f"2-D mesh: cohort={mesh.devices.shape[0]} × "
+                  f"model={mesh.devices.shape[1]} over "
+                  f"{mesh.devices.size} devices", flush=True)
         server = PersonalizationServer(params, loss, pcfg,
                                        modes=(args.mode,),
                                        max_pending=max(B, 1),
                                        personal_subset=subset_spec,
-                                       delta_dtype=args.delta_dtype)
+                                       delta_dtype=args.delta_dtype,
+                                       **mesh_kw)
         if args.listen is not None:
             _serve_transport(args, server)
             return
@@ -304,7 +362,7 @@ def main():
     os.makedirs(args.out, exist_ok=True)
     record = {"arch": cfg.arch_id, "tok_per_s": tps,
               "personalized": args.personalize, "mode": args.mode,
-              "users": B,
+              "users": B, "model_axis": args.model_axis,
               "personal_subset": (subset_spec.descriptor()
                                   if subset_spec is not None else None),
               "delta_dtype": args.delta_dtype}

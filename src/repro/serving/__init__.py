@@ -32,7 +32,9 @@ Parts:
   * :mod:`repro.serving.batcher` — request queue + micro-batcher:
     concurrent requests coalesce into pow2-bucketed
     :class:`repro.fl.engine.CohortEngine` calls (vmap / lax.map /
-    shard_map over the ``("cohort",)`` mesh, users keyed to shards).
+    shard_map over the mesh's "cohort" axis — all devices of a 1-D
+    ``("cohort",)`` mesh or the rows of a 2-D ``("cohort", "model")``
+    mesh — with users keyed to cohort slices).
   * :mod:`repro.serving.bank` — :class:`DeltaRing`: persistent sharded
     DeltaBank ring-buffer holding the last W windows of stacked deltas and
     params snapshots (subset-pruned when a ``personal_subset`` is set) on
@@ -55,9 +57,16 @@ Parts:
 """
 from repro.serving.bank import DeltaRing                        # noqa: F401
 from repro.serving.batcher import (MODES, MicroBatcher, Ticket,  # noqa: F401
-                                   personalize_delta_fn,
                                    personalize_strategy)
 from repro.serving.server import PersonalizationServer           # noqa: F401
 from repro.serving.transport import (AsyncTransportClient,       # noqa: F401
                                      TransportBusy, TransportClient,
                                      TransportError, TransportServer)
+
+
+def __getattr__(name: str):
+    if name == "personalize_delta_fn":
+        # removed in PR 10; the batcher module raises the full breadcrumb
+        from repro.serving import batcher
+        return getattr(batcher, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

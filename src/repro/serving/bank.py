@@ -249,9 +249,14 @@ class DeltaRing:
         One fused ``apply_rows`` pass per contributing bank — weights fold
         β/M, per-row staleness damping and bucket-padding masks, exactly
         the buffered scheduler's math (:func:`admission_weights` is shared
-        with it).  Returns the post-apply state; the pre-apply params
-        become the closed window's snapshot and stay retained (the apply
-        never donates them).
+        with it).  Each bank's apply receives the window's ADMISSION order
+        (the order rows entered ``admit_row`` — submit order, by the
+        batcher's contract): on device-spanning banks the rows accumulate
+        sequentially in that order, so the post-advance params are
+        bit-identical between the 1-D and 2-D mesh layouts even though
+        the user→row placement differs.  Returns the post-apply state;
+        the pre-apply params become the closed window's snapshot and stay
+        retained (the apply never donates them).
         """
         m = len(self._pending)
         if m:
@@ -282,10 +287,21 @@ class DeltaRing:
                         bank.capacity, rows, beta=beta, count=m,
                         damping=damping, tau_max=self.tau_max)
                     stack = bank.stacked
+                # admission order, deduped (a twice-admitted row already
+                # carries its accumulated weight), then the zero-weight
+                # remainder — a full permutation for the ordered apply
+                seen, order = set(), []
+                for r, _ in rows:
+                    if r not in seen:
+                        seen.add(r)
+                        order.append(r)
+                order.extend(r for r in range(bank.capacity)
+                             if r not in seen)
                 state = apply_admitted_rows(
                     state, stack, weights, len(rows),
                     staleness_max=max(t for _, t in rows),
-                    staleness_sum=float(sum(t for _, t in rows)))
+                    staleness_sum=float(sum(t for _, t in rows)),
+                    order=order)
         self._pending = []
         self._user_rows = {}
         self.stats["windows"] += 1

@@ -10,7 +10,8 @@ computes the *personalization delta* — a params-shaped pytree with
 shard_map machinery (pow2 buckets, on-device DeltaBank) the training
 cohorts use, and the resulting bank rows double as the server-side update
 direction the ring folds back into the global model.  (The pre-PR-4
-``CohortEngine(client_fn=...)`` override this replaced is deprecated.)
+``CohortEngine(client_fn=...)`` override and its ``personalize_delta_fn``
+helper were removed in PR 10.)
 
 Fairness: ``user_cap`` bounds how many of one user's rows are admitted per
 aggregation window, so users with unequal request rates cannot monopolize
@@ -19,17 +20,23 @@ the window's ``apply_rows`` weight vector — over-cap requests are refused
 window) and counted in ``stats["fairness_capped"]``.
 
 Under ``cohort_impl="shard_map"`` the batcher lays the cohort out
-*shard-major*: user ``u`` always occupies a slot in shard
-``crc32(u) % n_shards`` of the ``("cohort",)`` mesh, so the user's delta
-row lands on the same device every window (stable row affinity — the
-"keyed by user shard" part of the ring-buffer).  Per-shard slots pad to a
-common pow2, which is exactly the engine's device-multiple bucket, so the
-layout adds no padding beyond what the engine would.
+*cohort-slice-major*: user ``u`` always occupies a slot in cohort slice
+``crc32(u) % n_slices``, where ``n_slices`` is the mesh's COHORT-axis
+size — all of a 1-D ``("cohort",)`` mesh's devices, or the rows of a 2-D
+``("cohort", "model")`` mesh, on which one slice is a whole
+model-parallel device group.  The user's delta row therefore lands on the
+same slice every window (stable row affinity — the "keyed by user slice"
+part of the ring-buffer), with its model dims spread over that slice's
+"model" devices.  Per-slice slots pad to a common pow2, which is exactly
+the engine's slice-multiple bucket, so the layout adds no padding beyond
+what the engine would.  The ``placed`` list a drain yields stays in
+SUBMIT order — the mesh-independent admission order the ring passes to
+the ordered window apply, which is what keeps post-advance params
+bit-identical across mesh layouts.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 import zlib
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
@@ -52,17 +59,13 @@ def personalize_strategy(pcfg: PersAFLConfig, loss_fn: Callable, mode: str,
                      personal_subset=personal_subset).bind(pcfg, loss_fn)
 
 
-def personalize_delta_fn(pcfg: PersAFLConfig, loss_fn: Callable,
-                         mode: str) -> Callable:
-    """DEPRECATED: the raw (params, batch) -> delta callable of the
-    pre-strategy era.  Kept one release for external callers; internally
-    the modes run as registry strategies (:func:`personalize_strategy`)."""
-    warnings.warn(
-        "personalize_delta_fn is deprecated; use "
-        "repro.fl.api.strategy('personalize', mode=...) / "
-        "personalize_strategy instead", DeprecationWarning, stacklevel=2)
-    strat = personalize_strategy(pcfg, loss_fn, mode)
-    return lambda params, batch: strat.local_update(params, batch, None)[0]
+def __getattr__(name: str):
+    if name == "personalize_delta_fn":
+        raise ImportError(
+            "repro.serving.batcher.personalize_delta_fn was removed in "
+            "PR 10 (deprecated since PR 4); use repro.fl.api.strategy("
+            "'personalize', mode=...) / personalize_strategy instead.")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -130,32 +133,38 @@ class MicroBatcher:
         return zlib.crc32(str(user).encode()) % self.n_shards
 
     def _layout(self, reqs: List[Tuple[Ticket, Dict]]):
-        """Shard-major cohort layout -> (batch_list, [(ticket, row)]).
+        """Slice-major cohort layout -> (batch_list, [(ticket, row)]).
 
-        With one shard the engine's own tail padding suffices; with N the
-        per-shard slot count pads to a pow2 so the total is exactly the
-        engine's device-multiple bucket (row i ↦ device i // per_shard).
+        With one cohort slice the engine's own tail padding suffices; with
+        N the per-slice slot count pads to a pow2 so the total is exactly
+        the engine's slice-multiple bucket (row i ↦ cohort slice
+        i // per_slice).  ``placed`` is emitted in SUBMIT order regardless
+        of which slice each request landed on: admission order must be a
+        mesh-independent total order on the window's rows (the ring feeds
+        it to the ordered window apply), and slice-major order would
+        permute with the mesh shape.
         """
         if self.n_shards == 1:
             return ([b for _, b in reqs],
                     [(t, i) for i, (t, _) in enumerate(reqs)])
-        shards: List[List[Tuple[Ticket, Dict]]] = \
+        shards: List[List[Tuple[int, Dict]]] = \
             [[] for _ in range(self.n_shards)]
-        for t, b in reqs:
-            shards[self._shard(t.user)].append((t, b))
+        for qi, (t, _) in enumerate(reqs):
+            shards[self._shard(t.user)].append((qi, reqs[qi][1]))
         per = _pow2(max(max(len(s) for s in shards), 1))
         fill = reqs[-1][1]
-        batch_list, placed = [], []
+        batch_list, row_of = [], {}
         for si, s in enumerate(shards):
             for j in range(per):
                 if j < len(s):
-                    t, b = s[j]
+                    qi, b = s[j]
                     batch_list.append(b)
-                    placed.append((t, si * per + j))
+                    row_of[qi] = si * per + j
                 else:
                     batch_list.append(fill)
                     self.stats["shard_padding"] += 1
-        return batch_list, placed
+        return batch_list, [(t, row_of[qi])
+                            for qi, (t, _) in enumerate(reqs)]
 
     def drain(self, current: int, snapshot_fn: Callable[[int], object], *,
               tau_max: int) -> Iterator[Tuple[str, int, DeltaBank,

@@ -107,8 +107,19 @@ class PersonalizationServer:
     pcfg        : personalization hyper-params (α for mode B, λ/K/η_in for
                   mode C, β/damping for the window apply)
     cohort_impl : forwarded to :class:`CohortEngine` — ``"shard_map"``
-                  splits user cohorts over the ``("cohort",)`` mesh and the
-                  batcher keys users to shards
+                  splits user cohorts over the mesh's "cohort" axis and
+                  the batcher keys users to cohort slices
+    mesh        : optional explicit mesh for the shard_map engines — a 1-D
+                  ``("cohort",)`` mesh or a 2-D ``("cohort", "model")``
+                  mesh from :func:`repro.sharding.ctx.cohort_model_mesh`;
+                  defaults to the ambient :func:`use_mesh` context, else
+                  the memoized 1-D cohort mesh
+    param_shardings : optional pytree of ``NamedSharding`` matching the
+                  params — placement constraint for the model axis of a
+                  2-D mesh; forwarded to every mode's engine, and the
+                  server's own params/snapshots are device_put to it so
+                  delta banks, head rows and ring snapshots inherit
+                  model-axis sharding (gather-not-transfer serving)
     windows     : ring depth W (banks + params snapshots retained)
     tau_max     : bounded-staleness admission (≤ W−1; default W−1)
     max_pending : auto-flush threshold for the request queue
@@ -139,10 +150,17 @@ class PersonalizationServer:
                  personal_subset=None, delta_dtype: str = "fp32",
                  robust: Optional[str] = None,
                  clip_norm: Optional[float] = None,
-                 trim_frac: float = 0.1):
+                 trim_frac: float = 0.1,
+                 mesh=None, param_shardings=None):
         self.pcfg = pcfg
         self.loss_fn = loss_fn
-        self.state = init_server_state(_own_copy(init_params))
+        params0 = _own_copy(init_params)
+        if param_shardings is not None:
+            # model-axis placement up front: every downstream artifact
+            # (snapshots, delta banks, head rows) derives its sharding
+            # from the params it was computed against
+            params0 = jax.device_put(params0, param_shardings)
+        self.state = init_server_state(params0)
         self.max_pending = max_pending
         self.head_cache = head_cache
         self.delta_dtype = delta_dtype
@@ -154,6 +172,7 @@ class PersonalizationServer:
         for mode in modes:
             eng = CohortEngine(
                 pcfg, loss_fn, cohort_impl=cohort_impl,
+                mesh=mesh, param_shardings=param_shardings,
                 strategy=personalize_strategy(
                     pcfg, loss_fn, mode,
                     personal_subset=self.personal_subset))

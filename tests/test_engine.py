@@ -12,9 +12,8 @@ import pytest
 from repro.configs.paper_models import MNIST_CNN
 from repro.core import PersAFLConfig, client_update, split_batches_for_option
 from repro.data import make_federated_dataset
-from repro.fl import (ApplyPolicy, AsyncSimulator, BufferedAsyncSimulator,
-                      CohortEngine, DelayModel, FLRun, SyncSimulator,
-                      buffered)
+from repro.fl import (ApplyPolicy, CohortEngine, DelayModel, FLRun,
+                      buffered, immediate, sync_barrier)
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
 
 
@@ -123,10 +122,11 @@ def fed_small():
 def _run_async(fed, *, vectorized, rounds=15, seed=0):
     clients, params, loss = fed
     pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02)
-    sim = AsyncSimulator(clients=clients, loss_fn=loss, init_params=params,
-                         pcfg=pcfg, delays=DelayModel(len(clients), seed=1),
-                         batch_size=8, seed=seed, vectorized=vectorized)
-    hist = sim.run(max_server_rounds=rounds)
+    sim = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                pcfg=pcfg, delays=DelayModel(len(clients), seed=1),
+                strategy="persafl", schedule=immediate(),
+                batch_size=8, seed=seed, vectorized=vectorized)
+    hist = sim.run(max_rounds=rounds)
     return sim, hist
 
 
@@ -158,11 +158,11 @@ def test_async_run_is_deterministic(fed_small):
 def test_buffered_async_end_to_end(fed_small):
     clients, params, loss = fed_small
     pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02, buffer_size=4)
-    sim = BufferedAsyncSimulator(clients=clients, loss_fn=loss,
-                                 init_params=params, pcfg=pcfg,
-                                 delays=DelayModel(len(clients), seed=1),
-                                 batch_size=8, seed=0)
-    hist = sim.run(max_server_rounds=16)
+    sim = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                pcfg=pcfg, delays=DelayModel(len(clients), seed=1),
+                strategy="persafl", schedule=buffered(4),
+                batch_size=8, seed=0)
+    hist = sim.run(max_rounds=16)
     t = int(sim.final_stats["server_rounds"])
     assert t >= 16 and t % 4 == 0           # advances M per flush
     assert len(hist.staleness) == t         # every contributing delta counted
@@ -180,11 +180,12 @@ def test_buffered_m1_matches_immediate_async(fed_small):
     kw = dict(clients=clients, loss_fn=loss, init_params=params,
               delays=DelayModel(len(clients), seed=1), batch_size=8, seed=0)
     pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02)
-    h_a = AsyncSimulator(pcfg=pcfg, **kw).run(max_server_rounds=10)
+    h_a = FLRun(pcfg=pcfg, strategy="persafl", schedule=immediate(),
+                **kw).run(max_rounds=10)
     kw["delays"] = DelayModel(len(clients), seed=1)
-    h_b = BufferedAsyncSimulator(
-        pcfg=dataclasses.replace(pcfg, buffer_size=1), **kw).run(
-            max_server_rounds=10)
+    h_b = FLRun(pcfg=dataclasses.replace(pcfg, buffer_size=1),
+                strategy="persafl", schedule=buffered(1), **kw).run(
+                    max_rounds=10)
     assert h_a.staleness == h_b.staleness
     np.testing.assert_allclose(h_a.active_times, h_b.active_times)
 
@@ -194,11 +195,11 @@ def test_buffered_flush_never_transfers_deltas_to_host(fed_small):
     — zero per-client (or per-bank) device→host delta transfers."""
     clients, params, loss = fed_small
     pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02, buffer_size=4)
-    sim = BufferedAsyncSimulator(clients=clients, loss_fn=loss,
-                                 init_params=params, pcfg=pcfg,
-                                 delays=DelayModel(len(clients), seed=1),
-                                 batch_size=8, seed=0)
-    sim.run(max_server_rounds=16)
+    sim = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                pcfg=pcfg, delays=DelayModel(len(clients), seed=1),
+                strategy="persafl", schedule=buffered(4),
+                batch_size=8, seed=0)
+    sim.run(max_rounds=16)
     assert sim.engine.stats["cohort_calls"] > 0
     assert sim.engine.stats["host_materializations"] == 0
 
@@ -277,9 +278,9 @@ def test_buffered_staleness_damping_discounts_stale_deltas(fed_small):
     for a in (0.0, 2.0):
         pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02, buffer_size=4,
                              staleness_damping=a)
-        sim = BufferedAsyncSimulator(pcfg=pcfg, **kw,
-                                     delays=DelayModel(len(clients), seed=1))
-        sim.run(max_server_rounds=8)
+        sim = FLRun(pcfg=pcfg, strategy="persafl", schedule=buffered(4),
+                    **kw, delays=DelayModel(len(clients), seed=1))
+        sim.run(max_rounds=8)
         runs[a] = sim.state["params"]
     p0 = jax.tree.leaves(params)
     moved = lambda p: sum(float(jnp.sum((a - b) ** 2))  # noqa: E731
@@ -291,10 +292,10 @@ def test_buffered_staleness_damping_discounts_stale_deltas(fed_small):
 def test_sync_cohort_path_runs(fed_small):
     clients, params, loss = fed_small
     pcfg = PersAFLConfig(option="A", q_local=2, eta=0.01)
-    sim = SyncSimulator(clients=clients, loss_fn=loss, init_params=params,
-                        pcfg=pcfg, delays=DelayModel(len(clients)),
-                        algo="fedavg", clients_per_round=3, batch_size=8,
-                        seed=0)
+    sim = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                pcfg=pcfg, delays=DelayModel(len(clients)),
+                strategy="fedavg", schedule=sync_barrier(3), batch_size=8,
+                seed=0)
     sim.run(max_rounds=3)
     assert sim.engine.stats["cohort_calls"] == 3
     assert sim.engine.stats["max_cohort"] == 3

@@ -19,7 +19,7 @@ import numpy as np
 import pytest
 
 from repro.core import PersAFLConfig, apply_buffered_rows, init_server_state
-from repro.fl import BufferedAsyncSimulator, CohortEngine, DelayModel
+from repro.fl import CohortEngine, DelayModel, FLRun, buffered
 from repro.kernels.fused_update.ops import apply_rows_tree
 
 
@@ -104,12 +104,12 @@ def test_shard_map_buffered_simulator_end_to_end():
 
     params = {"w": jnp.zeros((5, 4))}
     pcfg = PersAFLConfig(option="A", q_local=2, eta=0.05, buffer_size=4)
-    sim = BufferedAsyncSimulator(clients=clients, loss_fn=loss,
-                                 init_params=params, pcfg=pcfg,
-                                 delays=DelayModel(len(clients), seed=1),
-                                 batch_size=8, seed=0)
-    sim.engine = CohortEngine(pcfg, loss, cohort_impl="shard_map")
-    sim.run(max_server_rounds=8)
+    sim = FLRun(clients=clients, loss_fn=loss,
+                init_params=params, pcfg=pcfg,
+                delays=DelayModel(len(clients), seed=1),
+                strategy="persafl", schedule=buffered(),
+                batch_size=8, seed=0, cohort_impl="shard_map")
+    sim.run(max_rounds=8)
     assert sim.engine.stats["host_materializations"] == 0
     assert int(sim.final_stats["server_rounds"]) >= 8
     for leaf in jax.tree.leaves(sim.state["params"]):

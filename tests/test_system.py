@@ -8,8 +8,8 @@ import pytest
 from repro.configs.paper_models import MNIST_CNN
 from repro.core import PersAFLConfig
 from repro.data import make_federated_dataset, sample_batches
-from repro.fl import AsyncSimulator, DelayModel, SyncSimulator, \
-    make_personalized_eval
+from repro.fl import DelayModel, FLRun, immediate, make_personalized_eval, \
+    sync_barrier
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
 
 
@@ -48,10 +48,11 @@ def test_async_persafl_improves_accuracy(fed):
     acc0 = ev(params)
     pcfg = PersAFLConfig(option="C", q_local=5, eta=0.01, lam=25.0,
                          inner_steps=5, inner_eta=0.02)
-    sim = AsyncSimulator(clients=clients, loss_fn=loss, init_params=params,
-                         pcfg=pcfg, delays=DelayModel(len(clients)),
-                         batch_size=16, seed=0)
-    hist = sim.run(max_server_rounds=60, eval_every=60, eval_fn=ev)
+    sim = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                pcfg=pcfg, delays=DelayModel(len(clients)),
+                strategy="persafl", schedule=immediate(),
+                batch_size=16, seed=0)
+    hist = sim.run(max_rounds=60, eval_every=60, eval_fn=ev)
     assert hist.acc, "no eval recorded"
     assert hist.acc[-1] > acc0 + 0.1, (acc0, hist.acc)
     # staleness is recorded and non-negative
@@ -63,14 +64,15 @@ def test_async_concurrency_exceeds_sync(fed):
     """Paper Figure 2a: async active-client ratio >> sync."""
     clients, params, loss, acc = fed
     pcfg = PersAFLConfig(option="A", q_local=2, eta=0.02)
-    asim = AsyncSimulator(clients=clients, loss_fn=loss, init_params=params,
-                          pcfg=pcfg, delays=DelayModel(len(clients)),
-                          batch_size=8, seed=0)
-    ah = asim.run(max_server_rounds=30)
-    ssim = SyncSimulator(clients=clients, loss_fn=loss, init_params=params,
-                         pcfg=pcfg, delays=DelayModel(len(clients)),
-                         algo="fedavg", clients_per_round=3, batch_size=8,
-                         seed=0)
+    asim = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                 pcfg=pcfg, delays=DelayModel(len(clients)),
+                 strategy="persafl", schedule=immediate(),
+                 batch_size=8, seed=0)
+    ah = asim.run(max_rounds=30)
+    ssim = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                 pcfg=pcfg, delays=DelayModel(len(clients)),
+                 strategy="fedavg", schedule=sync_barrier(3), batch_size=8,
+                 seed=0)
     sh = ssim.run(max_rounds=6)
     a_ratio = float(np.mean(ah.active_ratio))
     s_ratio = float(np.mean(sh.active_ratio))
@@ -85,9 +87,9 @@ def test_sync_baselines_run(fed, algo):
     pcfg = PersAFLConfig(option="A", q_local=2, eta=0.01, alpha=0.01,
                          lam=25.0, inner_steps=3, inner_eta=0.02,
                          maml_mode="full")
-    sim = SyncSimulator(clients=clients, loss_fn=loss, init_params=params,
-                        pcfg=pcfg, delays=DelayModel(len(clients)),
-                        algo=algo, clients_per_round=3, batch_size=8, seed=0)
+    sim = FLRun(clients=clients, loss_fn=loss, init_params=params,
+                pcfg=pcfg, delays=DelayModel(len(clients)),
+                strategy=algo, schedule=sync_barrier(3), batch_size=8, seed=0)
     ev = make_personalized_eval(loss, acc, clients, ft_steps=1, ft_lr=0.02)
     hist = sim.run(max_rounds=4, eval_every=4, eval_fn=ev)
     assert hist.acc and np.isfinite(hist.acc[-1])
@@ -102,10 +104,11 @@ def test_staleness_grows_with_delay_spread(fed):
         dm = DelayModel(len(clients), seed=1,
                         down_range=(1.0, 1.0 + spread),
                         up_factor_range=(4.0, 4.0 + spread))
-        sim = AsyncSimulator(clients=clients, loss_fn=loss,
-                             init_params=params, pcfg=pcfg, delays=dm,
-                             batch_size=8, seed=0)
-        h = sim.run(max_server_rounds=40)
+        sim = FLRun(clients=clients, loss_fn=loss,
+                    init_params=params, pcfg=pcfg, delays=dm,
+                    strategy="persafl", schedule=immediate(),
+                    batch_size=8, seed=0)
+        h = sim.run(max_rounds=40)
         return max(h.staleness)
 
     assert run(12.0) >= run(0.0)
